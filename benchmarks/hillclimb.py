@@ -1,0 +1,88 @@
+"""§Perf hillclimb driver: re-lower the three selected cells under each
+candidate change and record the roofline deltas.
+
+Cells (chosen per the brief: worst roofline fraction, most
+collective-bound, most representative of the paper's technique):
+
+  A. smollm-360m × train_4k (16×16)      — worst MFU-bound / useful ratio
+  B. phi3.5-moe  × prefill_32k (16×16)   — most collective-bound
+  C. qwen3-moe   × train_4k (2×16×16)    — the MSF/DCN cell: paper-faithful
+     every-step sync vs the paper's periodic schedule vs beyond-paper
+     (int8 delta compression)
+
+Usage: PYTHONPATH=src python -m benchmarks.hillclimb [A|B|C ...]
+Writes experiments/perf/<cell>__<variant>.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def _run(tag: str, arch: str, shape: str, **kw):
+    from repro.launch.dryrun import run_cell
+    rec = run_cell(arch, shape, verbose=False, **kw)
+    os.makedirs("experiments/perf", exist_ok=True)
+    with open(f"experiments/perf/{tag}.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["status"] != "ok":
+        print(f"{tag}: {rec['status']} {rec.get('error', '')[:200]}")
+        return rec
+    t = rec["roofline"]
+    h = max(1, rec.get("opt_steps_per_call", 1))
+    print(f"{tag}: compute {t['compute_s']/h:8.3f}s | memory "
+          f"{t['memory_s']/h:8.3f}s | collective {t['collective_s']/h:8.3f}s "
+          f"| {t['dominant']:>10} | GB/dev {rec['resident_bytes_per_device']/1e9:6.2f} "
+          f"| MFU-bound {t['mfu_bound']*h*100:5.2f}%")
+    return rec
+
+
+def cell_a():
+    print("== Cell A: smollm-360m × train_4k (16×16) ==")
+    _run("A1_substrate", "smollm-360m", "train_4k", multi_pod=False)
+    _run("A2_context_parallel_attn", "smollm-360m", "train_4k",
+         multi_pod=False, rule_overrides={"attn_q_seq": ("model",)})
+    _run("A3_cp_attn_remat_dots", "smollm-360m", "train_4k",
+         multi_pod=False, rule_overrides={"attn_q_seq": ("model",)},
+         remat="dots")
+
+
+def cell_b():
+    print("== Cell B: phi3.5-moe × prefill_32k (16×16) ==")
+    _run("B1_flat_head_attn", "phi3.5-moe-42b-a6.6b", "prefill_32k",
+         multi_pod=False)
+    _run("B2_flat_head_tp_serving", "phi3.5-moe-42b-a6.6b", "prefill_32k",
+         multi_pod=False, rule_overrides={"embed": ()})
+    _run("B3_tp_serving_cp_attn", "phi3.5-moe-42b-a6.6b", "prefill_32k",
+         multi_pod=False,
+         rule_overrides={"embed": (), "attn_q_seq": ("model",)})
+
+
+def cell_c():
+    from repro.config import SyncConfig
+    print("== Cell C: qwen3-moe × train_4k (2×16×16, MSF ladder) ==")
+    _run("C0_paper_msf1_everystep", "qwen3-moe-235b-a22b", "train_4k",
+         multi_pod=True, sync=SyncConfig(strategy="sync_every_step"))
+    _run("C1_paper_periodic_H8", "qwen3-moe-235b-a22b", "train_4k",
+         multi_pod=True, sync=SyncConfig(strategy="hierarchical", period=8))
+    _run("C2_periodic_H64", "qwen3-moe-235b-a22b", "train_4k",
+         multi_pod=True, sync=SyncConfig(strategy="hierarchical", period=64))
+    _run("C3_H8_int8", "qwen3-moe-235b-a22b", "train_4k",
+         multi_pod=True,
+         sync=SyncConfig(strategy="hierarchical", period=8,
+                         compression="int8"))
+    _run("C4_H8_int16", "qwen3-moe-235b-a22b", "train_4k",
+         multi_pod=True,
+         sync=SyncConfig(strategy="hierarchical", period=8,
+                         compression="int16"))
+
+
+if __name__ == "__main__":
+    which = sys.argv[1:] or ["A", "B", "C"]
+    if "A" in which:
+        cell_a()
+    if "B" in which:
+        cell_b()
+    if "C" in which:
+        cell_c()

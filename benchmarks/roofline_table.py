@@ -1,0 +1,63 @@
+"""Assemble the §Dry-run / §Roofline tables from experiments/dryrun JSONs."""
+from __future__ import annotations
+
+import json
+import os
+from glob import glob
+from typing import Dict, List
+
+ARCH_ORDER = ["phi3.5-moe-42b-a6.6b", "qwen3-moe-235b-a22b", "llama3.2-3b",
+              "internlm2-1.8b", "smollm-360m", "qwen2.5-3b", "whisper-base",
+              "mamba2-2.7b", "zamba2-1.2b", "paligemma-3b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirname: str = "experiments/dryrun") -> List[Dict]:
+    recs = [json.load(open(f)) for f in glob(os.path.join(dirname, "*.json"))]
+    recs.sort(key=lambda r: (r["mesh"], ARCH_ORDER.index(r["arch"]),
+                             SHAPE_ORDER.index(r["shape"])))
+    return recs
+
+
+def markdown_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    head = ("| arch | shape | GB/dev | fits | compute_s | memory_s | "
+            "collective_s | bound | MODEL/HLO | MFU-bound |\n"
+            "|---|---|---|---|---|---|---|---|---|---|")
+    rows = [head]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                        f"| SKIP | — | — |")
+            continue
+        t = r["roofline"]
+        h = max(1, r.get("opt_steps_per_call", 1))   # per optimizer step
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['resident_bytes_per_device']/1e9:.1f} "
+            f"| {'✓' if r['fits_16g'] else '✗'} "
+            f"| {t['compute_s']/h:.3f} | {t['memory_s']/h:.3f} "
+            f"| {t['collective_s']/h:.3f} | {t['dominant']} "
+            f"| {t['useful_ratio']*h:.2f} | {t['mfu_bound']*h*100:.1f}% |")
+    return "\n".join(rows)
+
+
+def csv_lines(recs: List[Dict]) -> List[str]:
+    out = []
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        out.append(f"roofline,{r['arch']}|{r['shape']}|{r['mesh']},"
+                   f"{bound*1e6:.0f},"
+                   f"bound={t['dominant']} mfu_bound={t['mfu_bound']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    recs = load()
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### mesh {mesh}\n")
+        print(markdown_table(recs, mesh))

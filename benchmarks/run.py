@@ -1,0 +1,30 @@
+"""Benchmark entrypoint: ``python -m benchmarks.run``.
+
+One section per paper table/figure (benchmarks.paper_figs) plus the
+roofline summary assembled from the dry-run artifacts. Prints
+``name,label,value,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    # keep benchmarks on the real single device (no fake device count)
+    from benchmarks import paper_figs, roofline_table
+
+    which = sys.argv[1:] or list(paper_figs.ALL)
+    for name in which:
+        if name in paper_figs.ALL:
+            for line in paper_figs.ALL[name]():
+                print(line)
+
+    if os.path.isdir("experiments/dryrun"):
+        recs = roofline_table.load()
+        for line in roofline_table.csv_lines(recs):
+            print(line)
+
+
+if __name__ == "__main__":
+    main()

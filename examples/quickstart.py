@@ -1,0 +1,43 @@
+"""Quickstart: the paper's finding in 60 seconds on a laptop CPU.
+
+Trains the paper's SGD-SVM on a synthetic Ijcnn1 stand-in at three model
+synchronization frequencies (MSF = block size) and shows what the paper
+shows: accuracy is flat across MSF while the sync count — the
+communication driver — drops by orders of magnitude.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax.numpy as jnp
+
+from repro.core import svm
+from repro.data import make_svm_dataset
+
+
+def main() -> None:
+    ds = make_svm_dataset("ijcnn1", n_override=8000)
+    x, y = jnp.asarray(ds.x_train), jnp.asarray(ds.y_train)
+    xcv, ycv = jnp.asarray(ds.x_cv), jnp.asarray(ds.y_cv)
+    w0 = jnp.zeros(ds.features)
+    epochs, workers = 12, 8
+
+    print(f"dataset: ijcnn1 stand-in (n={ds.n_train}, d={ds.features})")
+    print(f"DMS: {workers} workers × {epochs} epochs\n")
+    print(f"{'block (1/MSF)':>14} {'syncs/epoch':>12} {'cv acc':>8} "
+          f"{'wall s':>8}")
+    for block in (1, 16, 256):
+        syncs = ds.n_train // workers // block
+        t0 = time.perf_counter()
+        w = svm.dms(w0, ds.x_train, ds.y_train, workers=workers,
+                    epochs=epochs, block_size=block)
+        acc = float(svm.accuracy(w, xcv, ycv))
+        dt = time.perf_counter() - t0
+        print(f"{block:>14} {syncs:>12} {acc:>8.4f} {dt:>8.2f}")
+
+    print("\npaper's conclusion: lower the MSF (bigger blocks) — same "
+          "accuracy, a fraction of the communication.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Batched serving demo: prefill + decode with KV cache on any arch.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch smollm-360m]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_smoke
+from repro.launch.mesh import make_test_mesh, test_mesh_config
+from repro.launch.serve import ServeEngine
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="smollm-360m")
+    p.add_argument("--requests", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--gen-tokens", type=int, default=12)
+    args = p.parse_args()
+
+    cfg = get_smoke(args.arch)
+    n_dev = len(jax.devices())
+    mesh = make_test_mesh((n_dev, 1))
+    mesh_cfg = test_mesh_config((n_dev, 1))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab_size,
+                           size=(args.requests, args.prompt_len),
+                           dtype=np.int32)
+    extras = {}
+    if cfg.family == "vlm":
+        extras["patches"] = jnp.zeros(
+            (args.requests, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        extras["frames"] = jnp.zeros(
+            (args.requests, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+
+    engine = ServeEngine(cfg, mesh, mesh_cfg,
+                         max_len=args.prompt_len + args.gen_tokens
+                         + (cfg.num_image_tokens or 0) + 1)
+    t0 = time.time()
+    tokens = engine.generate(prompts, args.gen_tokens, extras=extras)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} requests={args.requests} "
+          f"generated={tokens.shape[1]} tok/req "
+          f"({tokens.size / dt:.1f} tok/s)")
+    for i, row in enumerate(tokens[:4]):
+        print(f"  req{i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

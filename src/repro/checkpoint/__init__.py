@@ -1,0 +1,4 @@
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.elastic import rescale_replicated_state
+
+__all__ = ["CheckpointManager", "rescale_replicated_state"]

@@ -1,0 +1,47 @@
+"""Elastic mesh reshaping for local-SGD (MSF) replica state.
+
+Local-SGD replicas are *designed* to diverge between syncs, which makes
+elastic resize natural under the paper's averaging semantics:
+
+* **shrink** (K → K' < K replicas): average the K replicas (exactly the
+  paper's model synchronization), then keep/broadcast K' copies.
+* **grow** (K → K' > K): average, then broadcast to all K' replicas —
+  equivalent to a sync point followed by fan-out.
+
+The replica dimension is the leading axis of every leaf (the layout the
+local-SGD trainer uses under its pod-axis shard_map). States without a
+replica dim (plain DDP) pass through unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rescale_replicated_state(state, old_replicas: int, new_replicas: int):
+    """Reshape a replica-leading state pytree from K to K' replicas."""
+    if old_replicas == new_replicas:
+        return state
+
+    def leaf(x):
+        if x.ndim == 0 or x.shape[0] != old_replicas:
+            # scalar counters etc. — replicated, leave as-is
+            return x
+        avg = jnp.mean(x.astype(jnp.float32), axis=0)
+        out = jnp.broadcast_to(avg, (new_replicas,) + avg.shape)
+        return out.astype(x.dtype)
+
+    return jax.tree.map(leaf, state)
+
+
+def add_replica_dim(state, replicas: int):
+    """Fan a replica-free state out to K identical replicas (join a sync)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (replicas,) + x.shape), state)
+
+
+def drop_replica_dim(state):
+    """Average away the replica dim (final sync before export/eval)."""
+    return jax.tree.map(
+        lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype)
+        if x.ndim > 0 else x, state)

@@ -1,0 +1,231 @@
+"""Config system: typed dataclasses + dict/CLI overrides.
+
+Everything the launcher, dry-run and tests consume is one of these configs.
+No external deps (no hydra/omegaconf) — overrides are ``key.subkey=value``
+strings parsed by :mod:`repro.config.cli`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block config (dense-routing einsum formulation)."""
+
+    num_experts: int = 0           # 0 => dense FFN
+    top_k: int = 2
+    router_jitter: float = 0.0
+    load_balance_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block config."""
+
+    state_dim: int = 128           # N — SSM state size per head
+    head_dim: int = 64             # P — channels per SSD head
+    expand: int = 2                # d_inner = expand * d_model
+    chunk_size: int = 256          # SSD chunk length
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Unified architecture description covering every assigned family."""
+
+    name: str = "unnamed"
+    family: str = "dense"          # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 512
+    vocab_size: int = 1024
+    head_dim: int = 0              # 0 => d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    norm_type: str = "rms"         # rms | layer (whisper)
+    tie_embeddings: bool = False
+    # seq-chunked cross-entropy: cap the materialized logits to
+    # (B, ce_chunk, V) per scan step (0 ⇒ unchunked). Vital for
+    # 150k-vocab archs at 32k seq.
+    ce_chunk: int = 0
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    # hybrid (zamba2-style): a shared attention+MLP block applied every
+    # `shared_block_every` backbone layers.
+    shared_block_every: int = 0
+    # enc-dec (whisper-style)
+    n_encoder_layers: int = 0
+    # stubbed audio frontend: number of precomputed frame embeddings the
+    # encoder consumes (whisper: 1500 = 30 s at 50 Hz post-conv)
+    n_audio_frames: int = 0
+    # vlm (paligemma-style): number of image-prefix positions provided by the
+    # (stubbed) vision frontend.
+    num_image_tokens: int = 0
+    # long-context capability flag: sub-quadratic step cost in seq_len.
+    subquadratic: bool = False
+    dtype: str = "bfloat16"        # activation/computation dtype
+    param_dtype: str = "float32"   # master parameter dtype
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe.num_experts > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs and roofline)."""
+        from repro.models.registry import analytic_param_count
+
+        return analytic_param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.registry import analytic_param_count
+
+        return analytic_param_count(self, active_only=True)
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Logical device mesh. ``axis_names`` order is major→minor."""
+
+    shape: Tuple[int, ...] = (1,)
+    axis_names: Tuple[str, ...] = ("data",)
+    # which mesh axis carries each parallelism role
+    data_axis: str = "data"        # batch / FSDP axis
+    model_axis: str = "model"      # TP / EP / SP axis
+    replica_axis: str = ""         # local-SGD (MSF) replica axis; "" => none
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def axis_size(self, name: str) -> int:
+        if not name or name not in self.axis_names:
+            return 1
+        return self.shape[self.axis_names.index(name)]
+
+
+@dataclass(frozen=True)
+class SyncConfig:
+    """The paper's contribution as config: model-synchronization schedule.
+
+    ``strategy``:
+      * ``"sync_every_step"`` — canonical DDP (paper's MSF=1 analog).
+      * ``"periodic"``        — H local steps between parameter averages
+                                (paper's DMS / local SGD). ``period=H``.
+      * ``"hierarchical"``    — every-step sync on the data axis, periodic
+                                sync on the replica (pod) axis.
+    """
+
+    strategy: str = "sync_every_step"
+    period: int = 1                # H — data points/steps per sync (block size)
+    compression: str = "none"      # none | int8
+    error_feedback: bool = True    # residual accumulation for compression
+    slowmo: float = 0.0            # outer momentum on sync delta (0 => off)
+    slowmo_lr: float = 1.0
+    eval_at_sync: bool = False     # paper's per-sync CV-accuracy computation
+
+    @property
+    def msf_label(self) -> str:
+        return f"{self.strategy}(H={self.period},comp={self.compression})"
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "sgd"              # sgd | momentum | adamw
+    learning_rate: float = 1e-3
+    schedule: str = "constant"     # constant | paper_inverse | cosine
+    warmup_steps: int = 0
+    total_steps: int = 1000
+    momentum: float = 0.9
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0         # 0 => off
+    # dtype of adam/momentum moments. bf16 halves optimizer-state HBM —
+    # how the 235B config fits a single v5e pod (Gopher-style bf16 stats).
+    moment_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    dataset: str = "synthetic_lm"  # synthetic_lm | ijcnn1 | webspam | epsilon
+    seq_len: int = 1024
+    global_batch: int = 8
+    seed: int = 0
+    num_samples: int = 0           # 0 => dataset default
+    features: int = 0
+    sparsity: float = 0.0
+
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str = "/tmp/repro_ckpt"
+    interval_steps: int = 100
+    keep_last: int = 3
+    async_write: bool = False
+
+
+@dataclass(frozen=True)
+class FaultToleranceConfig:
+    step_deadline_sec: float = 0.0   # 0 => no straggler watchdog
+    max_restarts: int = 3
+    inject_failure_at: int = -1      # test hook: raise at this step
+    inject_straggle_sec: float = 0.0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Top-level experiment config."""
+
+    model: ModelConfig = field(default_factory=ModelConfig)
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    sync: SyncConfig = field(default_factory=SyncConfig)
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    data: DataConfig = field(default_factory=DataConfig)
+    checkpoint: CheckpointConfig = field(default_factory=CheckpointConfig)
+    fault: FaultToleranceConfig = field(default_factory=FaultToleranceConfig)
+    steps: int = 100
+    log_every: int = 10
+    remat: str = "none"            # none | full | dots  (activation ckpt policy)
+    scan_layers: bool = True       # lax.scan over layer stack
+    seed: int = 0
+
+
+def replace(cfg, **kw):
+    """``dataclasses.replace`` that also accepts dotted keys, e.g.
+    ``replace(cfg, **{"sync.period": 32})``."""
+    direct = {k: v for k, v in kw.items() if "." not in k}
+    nested: dict = {}
+    for k, v in kw.items():
+        if "." in k:
+            head, rest = k.split(".", 1)
+            nested.setdefault(head, {})[rest] = v
+    for head, sub in nested.items():
+        direct[head] = replace(getattr(cfg, head), **sub)
+    return dataclasses.replace(cfg, **direct)
+
+
+def asdict(cfg) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def config_fingerprint(cfg) -> str:
+    """Stable hash for checkpoint compatibility checks."""
+    import hashlib
+    import json
+
+    blob = json.dumps(asdict(cfg), sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]

@@ -1,0 +1,16 @@
+"""Assigned architecture configs. Importing this package registers all ten
+``--arch`` ids (plus the paper's SVM dataset configs in ``svm_datasets``)."""
+
+from repro.configs import (  # noqa: F401
+    internlm2_1p8b,
+    llama32_3b,
+    mamba2_2p7b,
+    paligemma_3b,
+    phi35_moe,
+    qwen25_3b,
+    qwen3_moe,
+    smollm_360m,
+    whisper_base,
+    zamba2_1p2b,
+)
+from repro.configs import svm_datasets  # noqa: F401

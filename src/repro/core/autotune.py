@@ -1,0 +1,111 @@
+"""MSF auto-tuning — closing the loop the paper left open.
+
+The paper *sweeps* the model synchronization frequency by hand and
+observes (i) communication time ∝ sync rate and (ii) accuracy flat across
+the explored range. This module picks H automatically from first
+principles, so the framework can set the schedule per (model × mesh ×
+fabric) without a sweep:
+
+**Cost model.** Per optimizer step,
+
+    T(H) ≈ T_step + T_sync / H
+    T_sync = wire_bytes(P, K, compression) / BW_link
+
+with ``T_step`` the compute+memory-bound step time (from the roofline
+terms or measured) and ``T_sync`` the parameter-sync collective on the
+sync axis (DCN for the hierarchical strategy). Communication efficiency
+alone is monotone in H — the paper's Figs 13–15 plateau.
+
+**Statistical guardrail.** Local SGD analysis (Stich 2018; Wang & Joshi
+2018) bounds the extra optimization error of H-step averaging by a term
+∝ H·η²·σ²; empirically the safe envelope is to keep the *parameter
+drift* per block small relative to the parameter scale. We expose this as
+``max_drift``: H is capped so that the predicted per-block drift
+(η·E[‖g‖]·H, callers pass measured grad/param norms) stays below
+``max_drift`` × ‖w‖. With the default 1% drift cap, the paper's own
+regime (its largest explored blocks) is comfortably inside the envelope.
+
+``choose_period`` returns the smallest H whose *remaining* sync overhead
+is below ``target_overhead`` of the step time, clipped to the drift cap —
+i.e. "as low an MSF as helps, and no lower", the paper's conclusion as an
+algorithm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.config.base import SyncConfig
+
+DCN_BW = 6.25e9       # bytes/s per chip, cross-pod
+ICI_BW = 50e9         # bytes/s per chip, intra-pod
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneInputs:
+    param_bytes_per_chip: int      # sharded parameter bytes on the sync axis
+    replicas: int                  # K — sync-axis size (e.g. pods)
+    step_time_s: float             # compute/memory-bound time per opt step
+    link_bw: float = DCN_BW        # the sync axis' per-chip bandwidth
+    grad_norm: float = 1.0         # E‖g‖ (measured or warmup estimate)
+    param_norm: float = 1.0        # ‖w‖
+    lr: float = 1e-3
+
+
+def sync_time_s(inp: TuneInputs, cfg: SyncConfig) -> float:
+    """One parameter sync on the sync axis (ring model, per chip)."""
+    p = inp.param_bytes_per_chip
+    k = max(2, inp.replicas)
+    if cfg.compression == "int8":
+        wire = p / 4 * (k - 1)
+    elif cfg.compression == "int16":
+        wire = p / 2 * 2 * (k - 1) / k
+    else:
+        wire = 2 * p * (k - 1) / k
+    return wire / inp.link_bw
+
+
+def drift_cap(inp: TuneInputs, max_drift: float) -> int:
+    """Largest H whose predicted per-block drift stays within the cap."""
+    per_step_drift = inp.lr * inp.grad_norm / max(inp.param_norm, 1e-12)
+    if per_step_drift <= 0:
+        return 1 << 16
+    return max(1, int(max_drift / per_step_drift))
+
+
+def choose_period(inp: TuneInputs, cfg: Optional[SyncConfig] = None, *,
+                  target_overhead: float = 0.05,
+                  max_drift: float = 0.01) -> int:
+    """Smallest H with sync overhead ≤ ``target_overhead``·step time,
+    clipped by the statistical drift cap."""
+    cfg = cfg or SyncConfig(strategy="hierarchical")
+    t_sync = sync_time_s(inp, cfg)
+    if t_sync <= 0 or inp.step_time_s <= 0:
+        return 1
+    h_comm = math.ceil(t_sync / (target_overhead * inp.step_time_s))
+    h = max(1, min(h_comm, drift_cap(inp, max_drift)))
+    return h
+
+
+def predicted_step_time(inp: TuneInputs, cfg: SyncConfig, h: int) -> float:
+    return inp.step_time_s + sync_time_s(inp, cfg) / max(1, h)
+
+
+def report(inp: TuneInputs, cfg: Optional[SyncConfig] = None) -> dict:
+    """Tuning summary across the candidate ladder (for logs/EXPERIMENTS)."""
+    cfg = cfg or SyncConfig(strategy="hierarchical")
+    h_star = choose_period(inp, cfg)
+    ladder = sorted({1, 8, 64, h_star})
+    return {
+        "sync_time_s": sync_time_s(inp, cfg),
+        "chosen_h": h_star,
+        "drift_cap": drift_cap(inp, 0.01),
+        "ladder": {
+            h: {
+                "step_s": predicted_step_time(inp, cfg, h),
+                "overhead": sync_time_s(inp, cfg) / max(1, h)
+                / inp.step_time_s,
+            } for h in ladder
+        },
+    }

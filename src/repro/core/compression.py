@@ -1,0 +1,95 @@
+"""Error-feedback int8 compression for sync collectives (beyond-paper).
+
+At an MSF sync point the replicas exchange a parameter *delta* (the local
+drift since the last sync). Quantizing that delta to int8 with per-tensor
+scales cuts the wire bytes 4× vs fp32 / 2× vs bf16; the quantization error
+is carried forward in an error-feedback buffer so it is re-submitted at the
+next sync — the standard EF-SGD trick that keeps convergence unbiased.
+
+Wire format per leaf: ``(q int8[shape], scale f32[1])``. The sync itself is
+an ``all_gather`` of the int8 payload over the sync axis (gather + local
+dequant-average), because summing int8 on the wire would overflow; with the
+pod axis size 2 the gather moves ~K·P int8 bytes vs 8·P for an fp32
+all-reduce — a 4× collective-term reduction, visible in the §Perf log.
+
+``quantize``/``dequantize`` have a Pallas kernel twin in
+``repro.kernels.quant`` (VMEM-tiled pack/unpack); these jnp versions are the
+oracle and the default CPU path.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (float) → (q int8, scale f32 scalar). Symmetric per-tensor."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_tree(delta, ef):
+    """(delta, ef) → (q_tree, scale_tree, new_ef). delta+ef is quantized."""
+    def leaf(d, e):
+        v = d.astype(jnp.float32) + e
+        q, s = quantize(v)
+        return q, s, v - dequantize(q, s)
+
+    out = jax.tree.map(leaf, delta, ef)
+    is_t = lambda x: isinstance(x, tuple)
+    q_tree = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+    s_tree = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+    new_ef = jax.tree.map(lambda o: o[2], out, is_leaf=is_t)
+    return q_tree, s_tree, new_ef
+
+
+def allgather_mean_dequant(q_tree, s_tree, axis: str, axes_tree=None):
+    """All-gather int8 payloads over ``axis`` and average the dequantized
+    values locally. Must run inside shard_map with ``axis`` manual.
+
+    ``axes_tree`` (optional): per-leaf logical axes — the gathered f32
+    dequant buffer is re-constrained to the parameter's sharding; without
+    it XLA loses the layout through the int8 round-trip and materializes
+    replicated f32 copies of every leaf (measured: ~550 GB/device on the
+    235B config).
+    """
+    from repro.sharding import current_rules
+
+    rules = current_rules()
+
+    def leaf(q, s, la):
+        constrained = (rules is not None and rules.mesh is not None
+                       and la is not None)
+        if constrained:
+            # pin the payload's auto-axis sharding on BOTH sides of the
+            # manual gather, or the partitioner replicates the full leaf
+            q = jax.lax.with_sharding_constraint(
+                q, rules.spec_for(tuple(la), q.shape))
+        qs = jax.lax.all_gather(q, axis)          # (K, *shape) int8 on the wire
+        ss = jax.lax.all_gather(s, axis)          # (K,) f32
+        if constrained:
+            qs = jax.lax.with_sharding_constraint(
+                qs, rules.spec_for((None,) + tuple(la), qs.shape))
+        deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * q.ndim)
+        if constrained:
+            deq = jax.lax.with_sharding_constraint(
+                deq, rules.spec_for((None,) + tuple(la), deq.shape))
+        return jnp.mean(deq, axis=0)
+
+    if axes_tree is None:
+        axes_tree = jax.tree.map(lambda q: None, q_tree)
+    return jax.tree.map(leaf, q_tree, s_tree, axes_tree,
+                        is_leaf=lambda x: x is None or not isinstance(x, dict))

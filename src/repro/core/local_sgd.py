@@ -1,0 +1,218 @@
+"""Local-SGD (MSF) trainer: the paper's DMS algorithm generalized to LMs.
+
+Two compiled step flavors, selected by ``SyncConfig.strategy``:
+
+* ``sync_every_step`` → :func:`make_ddp_step`. Canonical data-parallel
+  training: batch sharded over the data (and pod) axes, XLA inserts the
+  gradient all-reduce every step. This is the paper's MSF=1 analog and the
+  paper-faithful baseline the roofline table records first.
+
+* ``periodic`` / ``hierarchical`` → :func:`make_local_sgd_block`. The
+  paper's DMS: replicas (mesh axis ``replica_axis``, the ``pod``/DCN axis on
+  the production mesh) each take H optimizer steps on their own batch
+  shard, then average parameters (``sync_point``). One compiled
+  ``train_block`` = ``lax.scan`` over H microbatches + one sync, expressed
+  as a *partial-manual* ``jax.shard_map``: the replica axis is manual
+  (params carry a leading replica dim, divergent between syncs), while the
+  data/model axes stay in XLA auto mode so the inner step still gets
+  FSDP + tensor parallelism from sharding constraints. The compiled HLO is
+  therefore the full collective schedule — ICI collectives every microbatch,
+  one DCN sync per block — which is exactly what the roofline reads.
+
+State layout (plain dict → trivially checkpointable):
+
+    {"params": …, "opt": …, "sync": …, "step": i32[]}
+
+Under local SGD every leaf of params/opt/sync gains a leading ``replica``
+dim. Optimizer moments stay *local* to each replica between syncs (standard
+local-SGD practice; averaging them is a config flag away but costs another
+collective).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import TrainConfig
+from repro.core import sync as S
+from repro.models import layers as L
+from repro.optim import apply_updates, init_opt_state, opt_state_axes
+from repro.sharding import ShardingRules, rules_for, use_rules
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+
+
+from repro import flags as _flags
+
+
+def _scan(*args, **kw):
+    kw.setdefault("unroll", _flags.scan_unroll_arg())
+    return jax.lax.scan(*args, **kw)
+
+def build_state_axes(model, cfg: TrainConfig, replicated: bool):
+    """Logical-axes pytree for the full TrainState."""
+    param_axes = L.axes_of(model.param_defs())
+    axes = {
+        "params": param_axes,
+        "opt": opt_state_axes(cfg.optimizer, param_axes),
+        "sync": S.sync_state_axes(cfg.sync, param_axes),
+        "step": (),
+    }
+    if replicated:
+        def add_replica(la):
+            return ("replica",) + la
+        axes = {
+            "params": jax.tree.map(add_replica, axes["params"],
+                                   is_leaf=lambda x: isinstance(x, tuple)),
+            "opt": jax.tree.map(add_replica, axes["opt"],
+                                is_leaf=lambda x: isinstance(x, tuple)),
+            "sync": jax.tree.map(add_replica, axes["sync"],
+                                 is_leaf=lambda x: isinstance(x, tuple)),
+            "step": (),
+        }
+    return axes
+
+
+def init_state(model, cfg: TrainConfig, key: jax.Array, replicas: int = 0):
+    """``replicas > 0`` adds the leading replica dim (local-SGD layout)."""
+    params = model.init(key)
+    state = {
+        "params": params,
+        "opt": init_opt_state(cfg.optimizer, params),
+        "sync": S.init_sync_state(cfg.sync, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if replicas:
+        bcast = lambda x: jnp.broadcast_to(x, (replicas,) + x.shape)
+        state = {
+            "params": jax.tree.map(bcast, state["params"]),
+            "opt": jax.tree.map(bcast, state["opt"]),
+            "sync": jax.tree.map(bcast, state["sync"]),
+            "step": state["step"],
+        }
+    return state
+
+
+def state_shardings(state_axes, rules: ShardingRules, state_shapes=None):
+    """NamedSharding pytree from the logical-axes pytree."""
+    def leaf(la, shape=None):
+        return rules.sharding_for(la, shape)
+    if state_shapes is None:
+        return jax.tree.map(lambda la: leaf(la), state_axes,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(leaf, state_axes, state_shapes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+# ---------------------------------------------------------------------------
+# flavor A — every-step sync (paper baseline / canonical DDP)
+# ---------------------------------------------------------------------------
+
+def make_ddp_step(model, cfg: TrainConfig, mesh: Mesh,
+                  rules: Optional[ShardingRules] = None) -> Callable:
+    """(state, batch) → (state, metrics); grad all-reduce every step."""
+    rules = rules or rules_for(cfg.mesh, mesh)
+
+    def step(state, batch):
+        with use_rules(rules):
+            def loss_fn(p):
+                loss, aux = model.loss(p, batch)
+                return loss, aux
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"])
+            params, opt = apply_updates(cfg.optimizer, grads, state["opt"],
+                                        state["params"], state["step"])
+        new_state = {"params": params, "opt": opt, "sync": state["sync"],
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, **aux}
+        return new_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# flavor B — periodic sync over the replica axis (paper's DMS / local SGD)
+# ---------------------------------------------------------------------------
+
+def make_local_sgd_block(model, cfg: TrainConfig, mesh: Mesh,
+                         rules: Optional[ShardingRules] = None) -> Callable:
+    """(state, batch) → (state, metrics).
+
+    ``batch`` leaves are (H, B_global, …): H microbatches per sync block.
+    The replica axis is manual; each replica consumes its batch shard.
+    """
+    replica_axis = cfg.mesh.replica_axis or "pod"
+    rules = rules or rules_for(cfg.mesh, mesh)
+    # inside the block the replica axis is manual: constraints may only
+    # reference the remaining (auto) axes
+    from repro.sharding import strip_axes
+    inner_rules = strip_axes(rules, {replica_axis})
+    unstack = lambda tree: jax.tree.map(lambda x: x[0], tree)
+    restack = lambda tree: jax.tree.map(lambda x: x[None], tree)
+
+    def block_body(params, opt, sync_state, step, batch):
+        # local (per-replica) views; leading replica dim already stripped to 1
+        params = unstack(params)
+        opt = unstack(opt)
+        sync_state = unstack(sync_state)
+        params_start = params
+
+        with use_rules(inner_rules):
+            def micro(carry, mb):
+                p, o, s = carry
+                def loss_fn(pp):
+                    return model.loss(pp, mb)
+                (loss, aux), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(p)
+                p, o = apply_updates(cfg.optimizer, grads, o, p, s)
+                return (p, o, s + 1), loss
+
+            (params, opt, step), losses = _scan(
+                micro, (params, opt, step), batch)
+
+            params, sync_state = S.sync_point(
+                params_start, params, sync_state, cfg.sync, replica_axis,
+                param_axes=L.axes_of(model.param_defs()))
+
+            metrics = {"loss": jax.lax.pmean(jnp.mean(losses), replica_axis)}
+            if cfg.sync.eval_at_sync:
+                # the paper's per-sync convergence check (§V-C2): an extra
+                # forward pass on the last microbatch with the synced params
+                last_mb = jax.tree.map(lambda x: x[-1], batch)
+                eval_loss, _ = model.loss(params, last_mb)
+                metrics["sync_eval_loss"] = jax.lax.pmean(
+                    eval_loss, replica_axis)
+
+        return restack(params), restack(opt), restack(sync_state), step, metrics
+
+    shmapped = jax.shard_map(
+        block_body, mesh=mesh,
+        in_specs=(P(replica_axis), P(replica_axis), P(replica_axis), P(),
+                  P(None, replica_axis)),
+        out_specs=(P(replica_axis), P(replica_axis), P(replica_axis), P(),
+                   P()),
+        axis_names={replica_axis}, check_vma=False)
+
+    def step_fn(state, batch):
+        params, opt, sync_state, step, metrics = shmapped(
+            state["params"], state["opt"], state["sync"], state["step"],
+            batch)
+        return ({"params": params, "opt": opt, "sync": sync_state,
+                 "step": step}, metrics)
+
+    return step_fn
+
+
+def make_train_step(model, cfg: TrainConfig, mesh: Mesh,
+                    rules: Optional[ShardingRules] = None) -> Callable:
+    if S.needs_replica_axis(cfg.sync):
+        return make_local_sgd_block(model, cfg, mesh, rules)
+    return make_ddp_step(model, cfg, mesh, rules)

@@ -1,0 +1,262 @@
+"""Paper-faithful SGD-SVM: Algorithms 1 (SGD), 2 (SRDMS), 3 (DMS).
+
+Math (paper §III): hinge objective ``J = ½‖w‖² + C·Σ max(0, 1 − y⟨w,x⟩)``,
+per-sample subgradient ``∇J = w`` when the margin is met, ``w − C·y·x``
+otherwise, update ``w ← w − α∇J`` with ``α = 1/(1+t)`` decaying per epoch.
+
+Block semantics (§IV-B): within a block every point computes its update from
+the *same* incoming ``w`` and the block's outgoing weight is the average of
+the per-point updated weights — algebraically
+
+    w' = mean_i(w − α∇Jᵢ(w)) = w − α·mean_i(∇Jᵢ(w)),
+
+i.e. the paper's model-synchronizing SGD is mini-batch subgradient descent
+with an effective batch of ``K·s_b``. That identity is the paper's own
+validation device (DMS ≡ its sequential replica) and is asserted in tests:
+
+    DMS(K workers, block s_b)  ≡  SRDMS(block K·s_b)   (exactly, in fp64)
+
+Three execution backends share the block math:
+
+* :func:`seq_sgd`      — Algorithm 1, ``lax.scan`` over points.
+* :func:`srdms`        — Algorithm 2, ``lax.scan`` over blocks.
+* :func:`dms`          — Algorithm 3; ``backend="vmap"`` simulates K workers
+  on one device (bit-identical math), ``backend="shard_map"`` runs manual
+  collectives over the mesh data axis (``MPI_AllReduce`` → ``lax.pmean``).
+
+``grad_impl="pallas"`` routes the block-gradient hot spot through the fused
+Pallas kernel (:mod:`repro.kernels.hinge`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def hinge_objective(w: jax.Array, x: jax.Array, y: jax.Array,
+                    c: float = 1.0) -> jax.Array:
+    """Paper eq. (2): ½‖w‖² + C·Σ hinge."""
+    margins = 1.0 - y * (x @ w)
+    return 0.5 * jnp.dot(w, w) + c * jnp.sum(jnp.maximum(0.0, margins))
+
+
+def accuracy(w: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    pred = jnp.where(x @ w >= 0, 1.0, -1.0)
+    return jnp.mean(pred == y)
+
+
+def block_grad(w: jax.Array, xb: jax.Array, yb: jax.Array, c: float,
+               impl: str = "jnp") -> jax.Array:
+    """Mean subgradient of a block (same incoming w for every point).
+
+    ``∇ = w − C·mean_i(violᵢ·yᵢ·xᵢ)`` where viol = 1{1 − y⟨w,x⟩ > 0}.
+    """
+    if impl == "pallas":
+        from repro.kernels.hinge import ops as hinge_ops
+        return hinge_ops.hinge_block_grad(w, xb, yb, c)
+    margins = 1.0 - yb * (xb @ w)
+    viol = (margins > 0).astype(w.dtype)
+    return w - c * ((viol * yb) @ xb) / xb.shape[0]
+
+
+def _point_update(w, x, y, alpha, c):
+    """Algorithm 1 inner step (single point)."""
+    margin = 1.0 - y * jnp.dot(x, w)
+    grad = jnp.where(margin > 0, w - c * y * x, w)
+    return w - alpha * grad
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — sequential SGD
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("epochs", "c"))
+def seq_sgd(w0: jax.Array, x: jax.Array, y: jax.Array, *, epochs: int,
+            c: float = 1.0) -> jax.Array:
+    def epoch(w, t):
+        alpha = 1.0 / (1.0 + t.astype(w.dtype))
+        def point(w, xy):
+            xi, yi = xy
+            return _point_update(w, xi, yi, alpha, c), None
+        w, _ = jax.lax.scan(point, w, (x, y))
+        return w, None
+    w, _ = jax.lax.scan(epoch, w0, jnp.arange(epochs))
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — SRDMS (sequential replica of the distributed algorithm)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("epochs", "block_size", "c", "grad_impl",
+                                    "with_history", "eval_every_sync"))
+def srdms(w0: jax.Array, x: jax.Array, y: jax.Array, *, epochs: int,
+          block_size: int, c: float = 1.0, grad_impl: str = "jnp",
+          x_cv: Optional[jax.Array] = None, y_cv: Optional[jax.Array] = None,
+          with_history: bool = False, eval_every_sync: bool = False):
+    """Algorithm 2. Data is truncated to a whole number of blocks.
+
+    With ``with_history`` (and cv arrays), returns per-epoch
+    (objective, cv_accuracy). ``eval_every_sync=True`` reproduces the
+    paper's §V-C2 methodology exactly: the cross-validation accuracy and
+    objective are recomputed at EVERY model synchronization (block) — the
+    per-sync overhead whose dilution with larger blocks is the paper's
+    Figs 2/4 sequential-time effect.
+    """
+    n, d = x.shape
+    nb = n // block_size
+    xb = x[: nb * block_size].reshape(nb, block_size, d)
+    yb = y[: nb * block_size].reshape(nb, block_size)
+
+    def epoch(w, t):
+        alpha = 1.0 / (1.0 + t.astype(w.dtype))
+        def block(w, xy):
+            xblk, yblk = xy
+            w = w - alpha * block_grad(w, xblk, yblk, c, grad_impl)
+            if eval_every_sync:
+                obj = hinge_objective(w, x, y, c)
+                acc = accuracy(w, x_cv, y_cv) if x_cv is not None else jnp.nan
+                return w, (obj, acc)
+            return w, None
+        w, sync_hist = jax.lax.scan(block, w, (xb, yb))
+        if with_history:
+            obj = hinge_objective(w, x, y, c)
+            acc = accuracy(w, x_cv, y_cv) if x_cv is not None else jnp.nan
+            return w, (obj, acc)
+        if eval_every_sync:
+            # keep only the epoch-final sync stats (static shapes)
+            return w, (sync_hist[0][-1], sync_hist[1][-1])
+        return w, None
+
+    w, hist = jax.lax.scan(epoch, w0, jnp.arange(epochs))
+    return (w, hist) if (with_history or eval_every_sync) else w
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 — DMS (distributed model synchronizing SGD)
+# ---------------------------------------------------------------------------
+
+def _shard_data(x: np.ndarray, y: np.ndarray, k: int):
+    """Equal-load split across K workers (paper's load balancing)."""
+    n = (x.shape[0] // k) * k
+    return (x[:n].reshape(k, n // k, -1), y[:n].reshape(k, n // k))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("epochs", "block_size", "c", "grad_impl"))
+def _dms_vmap(w0, xs, ys, *, epochs: int, block_size: int, c: float,
+              grad_impl: str):
+    """K simulated workers: xs (K, n_local, d). Every worker holds its own
+    w between syncs; sync = mean over the worker dim after each block."""
+    k, n_local, d = xs.shape
+    nb = n_local // block_size
+    xb = xs[:, : nb * block_size].reshape(k, nb, block_size, d)
+    yb = ys[:, : nb * block_size].reshape(k, nb, block_size)
+    # scan over blocks outside, vmap over workers inside
+    xb = jnp.swapaxes(xb, 0, 1)   # (nb, K, bs, d)
+    yb = jnp.swapaxes(yb, 0, 1)
+
+    def epoch(w, t):
+        alpha = 1.0 / (1.0 + t.astype(w.dtype))
+        def block(w, xy):
+            xblk, yblk = xy            # (K, bs, d), (K, bs)
+            grads = jax.vmap(lambda xw, yw: block_grad(w, xw, yw, c, grad_impl)
+                             )(xblk, yblk)
+            w_locals = w - alpha * grads          # (K, d) per-worker models
+            return jnp.mean(w_locals, axis=0), None   # MPI_AllReduce / K
+        w, _ = jax.lax.scan(block, w, (xb, yb))
+        return w, None
+
+    w, _ = jax.lax.scan(epoch, w0, jnp.arange(epochs))
+    return w
+
+
+def _dms_shard_map(w0, xs, ys, *, epochs: int, block_size: int, c: float,
+                   grad_impl: str, mesh, axis: str = "data"):
+    """Real collectives: workers = mesh axis shards; sync = lax.pmean."""
+    k = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    assert xs.shape[0] == k, (xs.shape, k)
+
+    def worker(w, x_local, y_local):
+        # x_local arrives as (1, n_local, d) — this worker's shard
+        x_local, y_local = x_local[0], y_local[0]
+        n_local, d = x_local.shape
+        nb = n_local // block_size
+        xb = x_local[: nb * block_size].reshape(nb, block_size, d)
+        yb = y_local[: nb * block_size].reshape(nb, block_size)
+
+        def epoch(w, t):
+            alpha = 1.0 / (1.0 + t.astype(w.dtype))
+            def block(w, xy):
+                xblk, yblk = xy
+                w_local = w - alpha * block_grad(w, xblk, yblk, c, grad_impl)
+                return jax.lax.pmean(w_local, axis), None
+            w, _ = jax.lax.scan(block, w, (xb, yb))
+            return w, None
+
+        w, _ = jax.lax.scan(epoch, w, jnp.arange(epochs))
+        return w
+
+    fn = jax.shard_map(worker, mesh=mesh,
+                       in_specs=(P(), P(axis), P(axis)), out_specs=P(),
+                       axis_names={axis}, check_vma=False)
+    return jax.jit(fn)(w0, xs, ys)
+
+
+def dms(w0: jax.Array, x: np.ndarray, y: np.ndarray, *, workers: int,
+        epochs: int, block_size: int, c: float = 1.0,
+        grad_impl: str = "jnp", backend: str = "vmap",
+        mesh=None, axis: str = "data") -> jax.Array:
+    """Algorithm 3 entry point. ``block_size`` is points per worker per sync
+    (the paper's MSF knob: larger block ⇒ lower sync frequency)."""
+    xs, ys = _shard_data(np.asarray(x), np.asarray(y), workers)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    if backend == "vmap":
+        return _dms_vmap(w0, xs, ys, epochs=epochs, block_size=block_size,
+                         c=c, grad_impl=grad_impl)
+    if backend == "shard_map":
+        assert mesh is not None
+        return _dms_shard_map(w0, xs, ys, epochs=epochs, block_size=block_size,
+                              c=c, grad_impl=grad_impl, mesh=mesh, axis=axis)
+    raise ValueError(backend)
+
+
+# ---------------------------------------------------------------------------
+# instrumented variant for the paper's timing-breakdown experiments
+# ---------------------------------------------------------------------------
+
+def dms_timed_steps(mesh, axis: str, *, block_size: int, c: float = 1.0,
+                    grad_impl: str = "jnp"):
+    """Returns (compute_step, sync_step) jitted separately so benchmarks can
+    time computation vs communication — the paper's Figs 10–12 methodology
+    (they instrument around MPI_AllReduce the same way)."""
+
+    def compute(w, xb, yb, alpha):
+        # per-worker block update, NO sync. xb: (K, bs, d) sharded over axis.
+        def worker(w, xw, yw):
+            g = block_grad(w, xw[0], yw[0], c, grad_impl)
+            return (w - alpha * g)[None]   # (1, d) → (K, d) globally
+        f = jax.shard_map(worker, mesh=mesh,
+                          in_specs=(P(), P(axis), P(axis)),
+                          out_specs=P(axis),
+                          axis_names={axis}, check_vma=False)
+        return f(w, xb, yb)
+
+    def sync(w_locals):
+        def worker(wl):
+            return jax.lax.pmean(wl[0], axis)
+        f = jax.shard_map(worker, mesh=mesh, in_specs=(P(axis),),
+                          out_specs=P(), axis_names={axis}, check_vma=False)
+        return f(w_locals)
+
+    return jax.jit(compute), jax.jit(sync)

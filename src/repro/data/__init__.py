@@ -1,0 +1,15 @@
+from repro.data.synthetic import (
+    SVMDataset,
+    make_svm_dataset,
+    PAPER_DATASETS,
+    synthetic_lm_batch,
+)
+from repro.data.pipeline import DataPipeline
+
+__all__ = [
+    "SVMDataset",
+    "make_svm_dataset",
+    "PAPER_DATASETS",
+    "synthetic_lm_batch",
+    "DataPipeline",
+]

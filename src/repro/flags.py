@@ -1,0 +1,30 @@
+"""Process-wide tracing flags.
+
+``unroll_scans()`` — when true, every ``lax.scan`` in the model/trainer code
+unrolls fully. The dry-run sets this (env ``REPRO_UNROLL_SCANS=1``) because
+XLA's ``cost_analysis()`` counts a while-loop body ONCE regardless of trip
+count; with unrolled scans the FLOPs/bytes/collective counts in the
+roofline table are exact. Normal training/serving keeps scans rolled
+(compact HLO, fast compile).
+"""
+from __future__ import annotations
+
+import os
+
+_FORCE: bool | None = None
+
+
+def set_unroll_scans(value: bool | None) -> None:
+    global _FORCE
+    _FORCE = value
+
+
+def unroll_scans() -> bool:
+    if _FORCE is not None:
+        return _FORCE
+    return os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
+
+
+def scan_unroll_arg() -> bool | int:
+    """Value to pass as ``lax.scan(..., unroll=)``."""
+    return True if unroll_scans() else 1

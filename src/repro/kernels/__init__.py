@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each subpackage is ``kernel.py`` (``pl.pallas_call`` + explicit BlockSpec
+VMEM tiling, TPU target), ``ops.py`` (jit'd public wrapper with padding /
+layout glue and an ``interpret=`` switch), and ``ref.py`` (pure-jnp oracle
+the tests sweep against).
+
+The paper itself has no kernel-level contribution (its optimization is the
+sync schedule); these kernels cover the substrate's hot spots:
+
+* ``hinge``            — fused SVM block-subgradient (the paper's inner loop)
+* ``flash_attention``  — tiled online-softmax attention (train/prefill)
+* ``ssd``              — Mamba2 state-space-duality chunk scan
+* ``quant``            — int8 pack/unpack for compressed MSF sync
+"""

@@ -1,0 +1,129 @@
+"""Flash attention (forward) Pallas kernel, GQA-aware, causal/prefix masks.
+
+Grid = (batch, q_heads, num_q_blocks, num_kv_blocks); the kv dim is the
+innermost (sequential on TPU), so the online-softmax running state —
+``acc (bq, dh)``, ``m/l (bq, 128)`` — lives in VMEM scratch that persists
+across kv steps and is reset when ``ik == 0``.
+
+GQA without materializing repeated KV: the K/V BlockSpec index maps divide
+the query-head grid index by the group size, so each query head streams its
+*shared* KV head straight from HBM — no gather, no expanded copy.
+
+Tiling (v5e): q block (1,1,bq,dh), kv block (1,1,bk,dh) with bq=bk=512,
+dh ≤ 256 ⇒ ~2·512·256·4B = 1 MiB resident + scratch; MXU-aligned since
+bq/bk/dh are multiples of 128 (dh padded by ops.py when needed).
+
+Causality is exploited at *block* granularity: fully-masked kv blocks are
+skipped via ``pl.when`` (half the FLOPs of a naive masked sweep at long
+seq; the roofline compute term of train cells counts this).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(group: int, causal: bool, prefix_len: int, scale: float,
+               q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+    bq = q_ref.shape[2]
+    bk = k_ref.shape[2]
+
+    @pl.when(ik == 0)
+    def _reset():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+
+    # block-level causal skip: this kv block attends nothing when its first
+    # key is beyond the last query of the block AND it is not prefix-visible
+    live = True
+    if causal:
+        live = (k_start <= q_start + bq - 1) | (k_start < prefix_len)
+    elif prefix_len:
+        # full attention over the first prefix_len (valid) keys only
+        live = k_start < prefix_len
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = (cols <= rows) | (cols < prefix_len)
+            s = jnp.where(mask, s, _NEG_INF)
+        elif prefix_len:
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(cols < prefix_len, s, _NEG_INF)
+
+        m_prev = m_ref[...]                           # (bq, 128) broadcast col
+        m_cur = jnp.max(s, axis=-1, keepdims=True)    # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)            # (bq, 128)
+        p = jnp.exp(s - m_new[:, :1])                 # (bq, bk)
+        corr = jnp.exp(m_prev[:, :1] - m_new[:, :1])  # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _write():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "prefix_len", "block_q", "block_k", "sm_scale", "interpret"))
+def flash_attention_padded(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool, prefix_len: int, block_q: int,
+                           block_k: int, sm_scale: float = 0.0,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, dh) · k/v: (B, KV, Sk, dh), aligned shapes. → like q.
+
+    ``sm_scale`` must be 1/√(unpadded dh) when dh was zero-padded.
+    """
+    b, h, sq, dh = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    assert h % kvh == 0
+    group = h // kvh
+    assert sq % block_q == 0 and sk % block_k == 0
+    grid = (b, h, sq // block_q, sk // block_k)
+    scale = sm_scale or 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(_fa_kernel, group, causal, prefix_len, scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),    # acc
+            pltpu.VMEM((block_q, 128), jnp.float32),   # m (running max)
+            pltpu.VMEM((block_q, 128), jnp.float32),   # l (running denom)
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: grouped-query SDPA with f32 softmax."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, prefix_len: int = 0) -> jax.Array:
+    """q: (B, H, Sq, dh) · k/v: (B, KV, Sk, dh) → (B, H, Sq, dh)."""
+    b, h, sq, dh = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, sq, dh)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (dh ** 0.5)
+    if causal:
+        rows = jnp.arange(sq)[:, None]
+        cols = jnp.arange(sk)[None, :]
+        mask = (cols <= rows) | (cols < prefix_len)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, dh).astype(q.dtype)

@@ -1,0 +1,41 @@
+"""Public wrapper: padding/alignment glue around the hinge Pallas kernel.
+
+Pads d to a lane multiple (128) and n to a block multiple. Padded rows get
+y = 0 so their hinge contribution vanishes (y multiplies every term);
+padded feature columns are zero in both X and w so they contribute nothing
+to margins and stay zero in the gradient.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hinge.kernel import hinge_block_grad_padded
+
+_LANE = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("c", "block_n", "interpret"))
+def hinge_block_grad(w: jax.Array, x: jax.Array, y: jax.Array, c: float = 1.0,
+                     *, block_n: int = 0, interpret: bool = True) -> jax.Array:
+    """Drop-in for :func:`repro.kernels.hinge.ref.hinge_block_grad`."""
+    n, d = x.shape
+    dp = _round_up(d, _LANE)
+    if block_n <= 0:
+        # VMEM-guided default: ≤4 MiB X block, sublane (8) aligned
+        block_n = max(8, min(512, _round_up(n, 8)))
+    npad = _round_up(n, block_n)
+
+    xp = jnp.zeros((npad, dp), x.dtype).at[:n, :d].set(x)
+    wp = jnp.zeros((1, dp), w.dtype).at[0, :d].set(w)
+    yp = jnp.zeros((1, npad), y.dtype).at[0, :n].set(y)
+
+    out = hinge_block_grad_padded(wp, xp, yp, c_over_n=c / n, block_n=block_n,
+                                  interpret=interpret)
+    return out[0, :d]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the hinge block-subgradient kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hinge_block_grad(w: jax.Array, x: jax.Array, y: jax.Array,
+                     c: float) -> jax.Array:
+    """w: (d,) · x: (n, d) · y: (n,) → mean subgradient (d,)."""
+    margins = 1.0 - y * (x @ w)
+    viol = (margins > 0).astype(w.dtype)
+    return w - c * ((viol * y) @ x) / x.shape[0]

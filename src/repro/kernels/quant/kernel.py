@@ -1,0 +1,62 @@
+"""int8 pack/unpack Pallas kernels for compressed MSF sync.
+
+The quantize pass is pure bandwidth: read fp32, write int8 (4× fewer output
+bytes). One grid step processes a (block_m, 128)-lane tile. The per-tensor
+scale is a (1, 1) scalar operand resident in SMEM-like VMEM for the whole
+sweep; computing the global amax is a cheap jnp reduction in ``ops.py``
+(fusing it here would force a second pass anyway).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, scale_ref, q_ref):
+    inv = 1.0 / scale_ref[0, 0]
+    q = jnp.round(x_ref[...] * inv)
+    q_ref[...] = jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+
+def _dequant_kernel(q_ref, scale_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * scale_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def quantize_padded(x: jax.Array, scale: jax.Array, *, block_m: int,
+                    interpret: bool = False) -> jax.Array:
+    """x: (m, 128) fp32, scale: (1, 1) → int8 (m, 128)."""
+    m, lanes = x.shape
+    assert m % block_m == 0
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, lanes), jnp.int8),
+        interpret=interpret,
+    )(x, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def dequantize_padded(q: jax.Array, scale: jax.Array, *, block_m: int,
+                      interpret: bool = False) -> jax.Array:
+    m, lanes = q.shape
+    assert m % block_m == 0
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q.shape[0], lanes), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

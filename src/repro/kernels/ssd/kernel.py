@@ -1,0 +1,115 @@
+"""Mamba2 SSD chunk-scan Pallas kernel (state-space duality).
+
+The SSD insight: split L into chunks of Q steps. Within a chunk the output
+is an attention-like quadratic form; across chunks only the (N×P) state
+recurs. Per chunk (per batch b, head h):
+
+    cum_t   = Σ_{s≤t} Δ_s·A                      (running log-decay)
+    L_ts    = exp(cum_t − cum_s)·1{s ≤ t}        (decay kernel)
+    Y_intra = ((C Bᵀ) ∘ L ∘ Δ) X                 (Q×Q quadratic, MXU)
+    Y_inter = (C ∘ exp(cum)) S_prev              (Q×N @ N×P, MXU)
+    S_next  = exp(cum_Q)·S_prev + (B ∘ Δ·exp(cum_Q − cum))ᵀ X
+
+Grid = (batch, heads, num_chunks); chunks are the innermost (sequential)
+dim, so the inter-chunk state lives in a (N, P) f32 VMEM scratch that
+persists across chunk steps and resets at chunk 0 — the TPU-native
+replacement for the GPU version's cross-block shared-memory staging.
+
+Tiling: chunk block loads are (1, Q, 1, P) x / (1, Q, N) B,C. With
+Q=128..256, N=128, P=64..128 everything is MXU-aligned and the VMEM
+working set is ≤ ~1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, sfin_ref,
+                state_ref):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _reset():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (Q,)
+    a = a_ref[0].astype(jnp.float32)               # scalar
+    bm = b_ref[0].astype(jnp.float32)              # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)              # (Q, N)
+
+    q = x.shape[0]
+    da = dt * a                                    # (Q,)
+    cum = jnp.cumsum(da)                           # (Q,) inclusive
+    total = cum[-1]
+
+    # intra-chunk quadratic term
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    # L_ts = exp(cum_t − cum_s) for s ≤ t (decay from step s+1 .. t);
+    # mask before exp so the s > t entries can't overflow
+    tri = cols <= rows
+    ldec = jnp.exp(jnp.where(tri, cum[:, None] - cum[None, :], -60.0))
+    ldec = jnp.where(tri, ldec, 0.0)
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())))  # (Q,Q)
+    scores = scores * ldec * dt[None, :]
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())))    # (Q,P)
+
+    # inter-chunk contribution from carried state
+    s_prev = state_ref[...]                        # (N, P)
+    c_scaled = cm * jnp.exp(cum)[:, None]          # (Q, N)
+    y = y + jax.lax.dot_general(c_scaled, s_prev, (((1,), (0,)), ((), ())))
+
+    # state update
+    b_scaled = bm * (dt * jnp.exp(total - cum))[:, None]   # (Q, N)
+    s_new = jnp.exp(total) * s_prev + jax.lax.dot_general(
+        b_scaled, x, (((0,), (0,)), ((), ())))             # (N, P)
+    state_ref[...] = s_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _final():
+        sfin_ref[0, 0] = s_new.astype(sfin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_padded(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+                    cm: jax.Array, *, chunk: int, interpret: bool = False):
+    """x: (B, L, H, P) · dt: (B, L, H) · a: (H,) · bm/cm: (B, L, N).
+
+    L must be a multiple of ``chunk``. Returns (y, final_state (B,H,N,P)).
+    """
+    b, l, h, p = x.shape
+    n = bm.shape[-1]
+    assert l % chunk == 0
+    grid = (b, h, l // chunk)
+
+    y, sfin = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda ib, ih, ic: (ib, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, bm, cm)
+    return y, sfin

@@ -1,0 +1,47 @@
+"""Oracle for the Mamba2 SSD chunk scan: the exact per-step recurrence.
+
+Selective state space (per head, diagonal A):
+
+    S_t = exp(Δ_t·A) · S_{t−1} + Δ_t · B_t xᵀ_t        S ∈ ℝ^{N×P}
+    y_t = C_t · S_t                                     y ∈ ℝ^{P}
+
+x: (B, L, H, P) · dt: (B, L, H) · A: (H,) (negative) · Bm/Cm: (B, L, N)
+(single B/C group shared across heads, as in Mamba2). Returns
+(y (B, L, H, P), final_state (B, H, N, P)).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+             cm: jax.Array, init_state: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    b, l, h, p = x.shape
+    n = bm.shape[-1]
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    a32 = a.astype(jnp.float32)
+    bm32 = bm.astype(jnp.float32)
+    cm32 = cm.astype(jnp.float32)
+
+    s0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inputs):
+        xt, dtt, bt, ct = inputs        # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * a32)      # (B,H)
+        s = s * decay[:, :, None, None]
+        s = s + (dtt[:, :, None, None] * bt[:, None, :, None]
+                 * xt[:, :, None, :])   # (B,H,N,P)
+        y = jnp.einsum("bn,bhnp->bhp", ct, s)
+        return s, y
+
+    xs = (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(dt32, 1, 0),
+          jnp.moveaxis(bm32, 1, 0), jnp.moveaxis(cm32, 1, 0))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)          # (B, L, H, P)
+    return y.astype(x.dtype), s_final

@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below this line may import jax -----------------------------
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes, record memory/cost/collective analysis for §Dry-run and
+§Roofline.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the dry-run needs 512 placeholder host devices to build the
+2×16×16 production mesh. (Smoke tests / benchmarks never import this
+module — they see the real single CPU device.)
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.config import SyncConfig, get_arch, list_archs
+from repro.launch.mesh import make_production_mesh, production_mesh_config
+from repro.launch.roofline import compute_terms
+from repro.launch.specs import SHAPE_CELLS, build_cell, cell_runnable
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             sync: SyncConfig | None = None, remat: str = "full",
+             rule_overrides: dict | None = None,
+             verbose: bool = True) -> dict:
+    """Lower + compile one cell; returns the result record (never raises)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_cfg = production_mesh_config(multi_pod=multi_pod)
+    cfg = get_arch(arch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "kind": SHAPE_CELLS[shape].kind,
+        "status": "ok",
+    }
+    ok, reason = cell_runnable(cfg, shape)
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        return rec
+
+    if sync is None and multi_pod and SHAPE_CELLS[shape].kind == "train":
+        # default multi-pod train flavor: the paper's technique — periodic
+        # (hierarchical) sync across the pod/DCN axis, H=8 local steps
+        sync = SyncConfig(strategy="hierarchical", period=8)
+
+    t0 = time.time()
+    try:
+        built = build_cell(arch, shape, mesh, mesh_cfg, sync=sync,
+                           remat=remat, rule_overrides=rule_overrides)
+        with jax.set_mesh(mesh):
+            lowered = built.step.lower(*built.args_sds)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+    except Exception as e:  # noqa: BLE001 — a failed cell is a data point
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        return rec
+    compile_s = time.time() - t0
+
+    n_dev = 512 if multi_pod else 256
+    pod_axis = 2 if multi_pod else 0
+    terms = compute_terms(cost, hlo, total_devices=n_dev,
+                          model_flops=built.model_flops,
+                          pod_axis_size=pod_axis)
+
+    mem_rec = {f: int(getattr(mem, f)) for f in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes")}
+    # per-device residency: donated args alias outputs
+    resident = (mem_rec["argument_size_in_bytes"]
+                + mem_rec["output_size_in_bytes"]
+                + mem_rec["temp_size_in_bytes"]
+                - mem_rec["alias_size_in_bytes"])
+    # local-SGD train blocks compile H optimizer steps into one call —
+    # record it so per-step roofline comparisons normalize correctly
+    opt_steps = (sync.period if sync is not None
+                 and sync.strategy in ("periodic", "hierarchical")
+                 and SHAPE_CELLS[shape].kind == "train" else 1)
+    rec.update(
+        sync=dataclasses.asdict(sync) if sync else None,
+        opt_steps_per_call=opt_steps,
+        compile_s=round(compile_s, 1),
+        params=built.param_count,
+        active_params=built.active_param_count,
+        memory=mem_rec,
+        resident_bytes_per_device=resident,
+        fits_16g=resident < 16e9,
+        cost={k: cost.get(k) for k in ("flops", "bytes accessed")},
+        roofline=dataclasses.asdict(terms),
+    )
+    if verbose:
+        print(f"[{mesh_name}] {arch} × {shape}: compile {compile_s:.0f}s | "
+              f"resident {resident/1e9:.2f} GB/dev (fits16G={rec['fits_16g']})"
+              f" | compute {terms.compute_s*1e3:.2f}ms"
+              f" memory {terms.memory_s*1e3:.2f}ms"
+              f" collective {terms.collective_s*1e3:.2f}ms"
+              f" → {terms.dominant}-bound | useful {terms.useful_ratio:.2f}")
+        print(f"    memory_analysis: {mem}")
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None,
+                   choices=list(SHAPE_CELLS) + [None])
+    p.add_argument("--all", action="store_true", help="run every cell")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--sync-strategy", default=None,
+                   choices=[None, "sync_every_step", "periodic",
+                            "hierarchical"])
+    p.add_argument("--sync-period", type=int, default=8)
+    p.add_argument("--compression", default="none", choices=["none", "int8"])
+    p.add_argument("--remat", default="full",
+                   choices=["none", "full", "dots"])
+    p.add_argument("--out", default="experiments/dryrun")
+    args = p.parse_args()
+
+    sync = None
+    if args.sync_strategy:
+        sync = SyncConfig(strategy=args.sync_strategy,
+                          period=args.sync_period,
+                          compression=args.compression)
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPE_CELLS)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if not (args.all or args.arch):
+        p.error("pass --arch or --all")
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_err = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, multi_pod=multi_pod, sync=sync,
+                               remat=args.remat)
+                tag = "2x16x16" if multi_pod else "16x16"
+                fname = f"{arch}__{shape}__{tag}.json".replace("/", "_")
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(rec, f, indent=1)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skip"
+                n_err += rec["status"] == "error"
+                if rec["status"] == "error":
+                    print(f"[{tag}] {arch} × {shape}: ERROR "
+                          f"{rec['error'][:300]}")
+                elif rec["status"] == "skip":
+                    print(f"[{tag}] {arch} × {shape}: SKIP ({rec['reason']})")
+    print(f"\ndry-run summary: {n_ok} ok / {n_skip} skip / {n_err} error")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

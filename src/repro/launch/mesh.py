@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — required because the dry-run must
+set XLA_FLAGS before any jax initialization, and smoke tests must see the
+real single-device CPU.
+
+Production target: TPU v5e pods, 256 chips each.
+  single-pod:  (data=16, model=16)           — the roofline-table mesh
+  multi-pod:   (pod=2, data=16, model=16)    — 512 chips; `pod` is the DCN
+               axis the MSF (local-SGD) schedule syncs across.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.config.base import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def production_mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    if multi_pod:
+        return MeshConfig(shape=(2, 16, 16),
+                          axis_names=("pod", "data", "model"),
+                          replica_axis="pod")
+    return MeshConfig(shape=(16, 16), axis_names=("data", "model"))
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (1, 1),
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh over however many (host) devices the test process has."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def test_mesh_config(shape: Tuple[int, ...] = (1, 1),
+                     axes: Tuple[str, ...] = ("data", "model")) -> MeshConfig:
+    replica = "pod" if "pod" in axes else ""
+    return MeshConfig(shape=shape, axis_names=axes, replica_axis=replica)

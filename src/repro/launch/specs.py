@@ -1,0 +1,266 @@
+"""Shape cells, input specs, and step-builders for dry-run/train/serve.
+
+A *cell* = (architecture × input shape). ``build_cell`` returns everything
+needed to lower it on a mesh: the jitted step function and the
+ShapeDtypeStruct arguments (no allocation — the shannon/kernels pattern).
+
+Cells (LM shapes are seq_len × global_batch):
+    train_4k     S=4096   B=256   → train_step   (DDP or MSF local-SGD)
+    prefill_32k  S=32768  B=32    → prefill_step
+    decode_32k   S=32768  B=128   → serve_step (1 token vs S-long KV cache)
+    long_500k    S=524288 B=1     → serve_step; sub-quadratic archs only
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import TrainConfig, get_arch, replace
+from repro.config.base import MeshConfig, ModelConfig, SyncConfig
+from repro.core import local_sgd as LS
+from repro.core import sync as SY
+from repro.models.registry import analytic_param_count, build_model
+from repro.sharding import ShardingRules, rules_for, use_rules
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPE_CELLS: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode", 32_768, 128),
+    "long_500k": ShapeCell("decode", 524_288, 1),
+}
+
+
+def cell_runnable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """The brief's mandated skips."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: 524k-token decode is "
+                       "quadratic/cache-infeasible — mandated skip")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# spec construction
+# ---------------------------------------------------------------------------
+
+def _is_layout_leaf(x) -> bool:
+    return (isinstance(x, tuple) and len(x) == 3
+            and isinstance(x[0], tuple))
+
+
+def layout_to_sds(layout, rules: ShardingRules):
+    """(shape, dtype, axes) triples → (SDS pytree, NamedSharding pytree)."""
+    def sds(leaf):
+        shape, dtype, axes = leaf
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    def sh(leaf):
+        shape, dtype, axes = leaf
+        return rules.sharding_for(axes, shape)
+
+    sds_tree = jax.tree.map(sds, layout, is_leaf=_is_layout_leaf)
+    sh_tree = jax.tree.map(sh, layout, is_leaf=_is_layout_leaf)
+    return sds_tree, sh_tree
+
+
+def state_specs(model, tcfg: TrainConfig, rules: ShardingRules,
+                replicas: int = 0):
+    """TrainState SDS + shardings via eval_shape (no allocation)."""
+    state_sds = jax.eval_shape(
+        lambda: LS.init_state(model, tcfg, jax.random.key(0),
+                              replicas=replicas))
+    axes = LS.build_state_axes(model, tcfg, replicated=replicas > 0)
+    shapes = jax.tree.map(lambda s: s.shape, state_sds)
+    shardings = jax.tree.map(
+        lambda la, shp: rules.sharding_for(la, shp), axes, shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return state_sds, shardings
+
+
+def _cast_tree(sds_tree, dtype):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype)
+        if jnp.issubdtype(s.dtype, jnp.floating) else s, sds_tree)
+
+
+# ---------------------------------------------------------------------------
+# cell builder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BuiltCell:
+    arch: str
+    shape_name: str
+    kind: str
+    step: Callable                 # jitted, ready to .lower(*args)
+    args_sds: Tuple[Any, ...]
+    model_flops: float             # 6·N_active·tokens (train) / 2·N·tok
+    param_count: int
+    active_param_count: int
+    notes: str = ""
+
+
+def model_flops_estimate(cfg: ModelConfig, kind: str, batch: int,
+                         seq: int) -> float:
+    n_active = analytic_param_count(cfg, active_only=True)
+    if kind == "train":
+        return 6.0 * n_active * batch * seq
+    if kind == "prefill":
+        return 2.0 * n_active * batch * seq
+    if kind == "decode":
+        return 2.0 * n_active * batch      # one token per request
+    raise ValueError(kind)
+
+
+def make_train_config(cfg: ModelConfig, mesh_cfg: MeshConfig, cell: ShapeCell,
+                      sync: Optional[SyncConfig] = None,
+                      optimizer: str = "adamw", remat: str = "full",
+                      ) -> TrainConfig:
+    from repro.config.base import DataConfig, OptimizerConfig
+    # ≥100B params: bf16 adam moments, or optimizer state alone overflows
+    # a single pod's HBM (Gopher-style bf16 statistics)
+    moment_dtype = ("bfloat16"
+                    if analytic_param_count(cfg) > 100e9 else "float32")
+    return TrainConfig(
+        model=cfg,
+        mesh=mesh_cfg,
+        sync=sync or SyncConfig(),
+        optimizer=OptimizerConfig(name=optimizer, learning_rate=3e-4,
+                                  schedule="cosine", warmup_steps=100,
+                                  total_steps=10_000, grad_clip=1.0,
+                                  moment_dtype=moment_dtype),
+        data=DataConfig(seq_len=cell.seq, global_batch=cell.batch),
+        remat=remat,
+    )
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, mesh_cfg: MeshConfig,
+               *, sync: Optional[SyncConfig] = None,
+               remat: str = "full", attn_impl: str = "jnp",
+               serve_dtype=jnp.bfloat16,
+               rule_overrides: Optional[dict] = None,
+               cfg_override: Optional[ModelConfig] = None) -> BuiltCell:
+    cell = SHAPE_CELLS[shape_name]
+    cfg = cfg_override or get_arch(arch)
+    ok, reason = cell_runnable(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"cell {arch}×{shape_name} skipped: {reason}")
+
+    rules = rules_for(mesh_cfg, mesh, overrides=rule_overrides)
+    mf = model_flops_estimate(cfg, cell.kind, cell.batch, cell.seq)
+    common = dict(arch=arch, shape_name=shape_name, kind=cell.kind,
+                  model_flops=mf,
+                  param_count=analytic_param_count(cfg),
+                  active_param_count=analytic_param_count(cfg, True))
+
+    if cell.kind == "train":
+        model = build_model(cfg, scan_layers=True, remat=remat,
+                            attn_impl=attn_impl)
+        tcfg = make_train_config(cfg, mesh_cfg, cell, sync=sync, remat=remat)
+        use_local_sgd = SY.needs_replica_axis(tcfg.sync)
+        replicas = mesh_cfg.axis_size(mesh_cfg.replica_axis) \
+            if use_local_sgd else 0
+        state_sds, state_sh = state_specs(model, tcfg, rules,
+                                          replicas=replicas)
+        layout = model.input_layout("train", cell.batch, cell.seq)
+
+        if use_local_sgd:
+            # batch gains a leading H (microbatch) dim; B shards over
+            # (pod, data) — each pod replica consumes its own rows
+            h = max(1, tcfg.sync.period)
+            batch_rules = rules_for(
+                mesh_cfg, mesh,
+                overrides={**(rule_overrides or {}),
+                           "batch": (mesh_cfg.replica_axis or "pod",
+                                     mesh_cfg.data_axis)})
+            layout = jax.tree.map(
+                lambda leaf: ((h,) + leaf[0], leaf[1], (None,) + leaf[2]),
+                layout, is_leaf=_is_layout_leaf)
+            batch_sds, batch_sh = layout_to_sds(layout, batch_rules)
+            step = LS.make_local_sgd_block(model, tcfg, mesh, rules)
+        else:
+            if mesh_cfg.replica_axis:
+                # every-step DDP on the multi-pod mesh: batch shards over
+                # pod × data, gradients all-reduce over both
+                batch_rules = rules_for(
+                    mesh_cfg, mesh,
+                    overrides={**(rule_overrides or {}),
+                               "batch": (mesh_cfg.replica_axis,
+                                         mesh_cfg.data_axis)})
+            else:
+                batch_rules = rules
+            batch_sds, batch_sh = layout_to_sds(layout, batch_rules)
+            # the model-internal constraints must match: on the multi-pod
+            # mesh DDP shards batch over pod×data INSIDE the step too
+            step = LS.make_ddp_step(model, tcfg, mesh, batch_rules)
+
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        return BuiltCell(step=jitted, args_sds=(state_sds, batch_sds),
+                         **common)
+
+    # ---- serving kinds ----
+    model = build_model(cfg, scan_layers=True, remat="none",
+                        attn_impl=attn_impl)
+    serve_batch_axes = ((mesh_cfg.replica_axis, mesh_cfg.data_axis)
+                        if mesh_cfg.replica_axis else (mesh_cfg.data_axis,))
+    serve_rules = rules_for(mesh_cfg, mesh,
+                            overrides={**(rule_overrides or {}),
+                                       "batch": serve_batch_axes})
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    params_sds = _cast_tree(params_sds, serve_dtype)
+    from repro.models import layers as L
+    param_axes = L.axes_of(model.param_defs())
+    params_sh = jax.tree.map(
+        lambda la, s: serve_rules.sharding_for(la, s.shape),
+        param_axes, params_sds,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+    if cell.kind == "prefill":
+        layout = model.input_layout("prefill", cell.batch, cell.seq)
+        batch_sds, batch_sh = layout_to_sds(layout, serve_rules)
+        # pin the output cache to the decode-ready (cache_seq-sharded)
+        # layout — the prefill→decode handoff reshard
+        cache_layout = model.input_layout("decode", cell.batch,
+                                          cell.seq)["cache"]
+        _, cache_sh = layout_to_sds(cache_layout, serve_rules)
+
+        def prefill_step(params, batch):
+            with use_rules(serve_rules):
+                return model.prefill(params, batch)
+
+        jitted = jax.jit(prefill_step,
+                         in_shardings=(params_sh, batch_sh),
+                         out_shardings=(None, cache_sh))
+        return BuiltCell(step=jitted, args_sds=(params_sds, batch_sds),
+                         **common)
+
+    # decode
+    layout = model.input_layout("decode", cell.batch, cell.seq)
+    batch_sds, batch_sh = layout_to_sds(layout, serve_rules)
+    batch_sds = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, serve_dtype)
+        if jnp.issubdtype(s.dtype, jnp.bfloat16) else s, batch_sds)
+
+    def serve_step(params, batch):
+        with use_rules(serve_rules):
+            return model.decode_step(params, batch)
+
+    jitted = jax.jit(serve_step, in_shardings=(params_sh, batch_sh),
+                     out_shardings=(None, batch_sh["cache"]),
+                     donate_argnums=(1,))
+    return BuiltCell(step=jitted, args_sds=(params_sds, batch_sds), **common)

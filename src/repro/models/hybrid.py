@@ -1,0 +1,242 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block.
+
+One set of attention+MLP parameters is reused at every application point
+(every ``shared_block_every`` backbone layers) — Zamba2's parameter-sharing
+trick. Layer grouping: the backbone is split into groups of
+``shared_block_every`` Mamba2 layers; after each full group the shared
+block runs (the trailing partial group, if any, gets no shared block).
+Each application point needs its own KV cache at decode (shared *weights*,
+distinct *state*).
+
+Deviation from the published Zamba2 noted in DESIGN.md: the real model
+concatenates the block input with the original embeddings (2d → d
+projection) before the shared block; we feed the current hidden state
+directly. LoRA adapters on the shared block are omitted.
+
+``long_500k`` viability: Mamba2 layers carry O(1) state; the shared-block
+caches are seq-length but there are only ``n_layers // shared_block_every``
+of them (6 for zamba2-1.2b vs 38), and they shard along ``cache_seq`` over
+the model axis with the distributed flash-decode merge.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.losses import ce_loss
+from repro.models.transformer import layer_decode, layer_defs, layer_fwd
+from repro.sharding import constrain
+
+
+
+from repro import flags as _flags
+
+
+def _scan(*args, **kw):
+    kw.setdefault("unroll", _flags.scan_unroll_arg())
+    return jax.lax.scan(*args, **kw)
+
+class HybridModel:
+    def __init__(self, cfg: ModelConfig, *, scan_layers: bool = True,
+                 remat: str = "none", attn_impl: str = "jnp"):
+        assert cfg.shared_block_every > 0
+        self.cfg = cfg
+        self.scan_layers = scan_layers
+        self.remat = remat
+        self.attn_impl = attn_impl
+        self.n_groups = cfg.n_layers // cfg.shared_block_every
+        self.tail = cfg.n_layers - self.n_groups * cfg.shared_block_every
+
+    # ----------------------------------------------------------- parameters
+    def param_defs(self) -> L.ParamDefs:
+        cfg = self.cfg
+        block = {
+            "ln": L.norm_defs(cfg.d_model, cfg.norm_type),
+            "mamba": S.mamba_defs(cfg),
+        }
+        defs = {
+            "embed": L.embed_defs(cfg.vocab_size, cfg.d_model),
+            "layers": L.stack_defs(block, cfg.n_layers),
+            "shared": layer_defs(cfg),        # ONE attention+MLP block
+            "final_norm": L.norm_defs(cfg.d_model, cfg.norm_type),
+        }
+        defs.update(L.unembed_defs(cfg.vocab_size, cfg.d_model,
+                                   cfg.tie_embeddings))
+        return defs
+
+    def init(self, key: jax.Array):
+        return L.init_params(self.param_defs(), key,
+                             dtype=jnp.dtype(self.cfg.param_dtype))
+
+    # ------------------------------------------------------------- forward
+    def _mamba_group(self, group_params, x, return_cache: bool):
+        def scan_body(carry, lp):
+            cfg = self.cfg
+            h = L.apply_norm(lp["ln"], carry, cfg.norm_type, cfg.norm_eps)
+            out = S.mamba_fwd(lp["mamba"], h, cfg, return_state=return_cache)
+            if return_cache:
+                out, tails = out
+                return carry + out, tails
+            fn_out = carry + out
+            return fn_out, None
+
+        if self.remat != "none" and not return_cache:
+            body = jax.checkpoint(lambda c, p: scan_body(c, p))
+        else:
+            body = scan_body
+        return _scan(body, x, group_params)
+
+    def _group_slices(self, layers_params):
+        """Split stacked layer params into per-group views."""
+        k = self.cfg.shared_block_every
+        groups = []
+        for g in range(self.n_groups):
+            groups.append(jax.tree.map(
+                lambda p: p[g * k:(g + 1) * k], layers_params))
+        if self.tail:
+            groups.append(jax.tree.map(
+                lambda p: p[self.n_groups * k:], layers_params))
+        return groups
+
+    def backbone(self, params, x, return_cache: bool = False):
+        cfg = self.cfg
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        groups = self._group_slices(params["layers"])
+        mamba_caches, attn_caches = [], []
+        aux = jnp.float32(0.0)
+
+        for g, gp in enumerate(groups):
+            x, tails = self._mamba_group(gp, x, return_cache)
+            if return_cache:
+                mamba_caches.append(tails)
+            if g < self.n_groups:                      # shared block
+                out = layer_fwd(params["shared"], x, positions, cfg,
+                                mask_mode="causal", prefix_len=0,
+                                attn_impl=self.attn_impl,
+                                return_kv=return_cache)
+                if return_cache:
+                    x, a, k, v = out
+                    attn_caches.append((k, v))
+                else:
+                    x, a = out
+                aux = aux + a
+
+        x = L.apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+        if return_cache:
+            mamba_cache = jax.tree.map(
+                lambda *zs: jnp.concatenate(zs, axis=0), *mamba_caches)
+            cache = {
+                "mamba": mamba_cache,
+                "attn_k": jnp.stack([k for k, _ in attn_caches]),
+                "attn_v": jnp.stack([v for _, v in attn_caches]),
+            }
+            return x, cache
+        return x
+
+    # ----------------------------------------------------------- train/serve
+    def loss(self, params, batch):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = L.embed(params["embed"], batch["tokens"], dtype)
+        x = self.backbone(params, x)
+        table = params["embed"]["embedding"] if cfg.tie_embeddings \
+            else params["out_embedding"]
+        loss = ce_loss(x, table, batch["targets"], chunk=cfg.ce_chunk)
+        return loss, {"ce": loss}
+
+    def _logits_last(self, params, x_last):
+        cfg = self.cfg
+        table = params["embed"]["embedding"] if cfg.tie_embeddings \
+            else params["out_embedding"]
+        logits = jnp.einsum("bd,vd->bv", x_last, table.astype(x_last.dtype))
+        return constrain(logits, "batch", "vocab")
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = L.embed(params["embed"], batch["tokens"], dtype)
+        x, cache = self.backbone(params, x, return_cache=True)
+        return self._logits_last(params, x[:, -1]), cache
+
+    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        mamba = {k: jnp.zeros(shape, dt) for k, (shape, dt, _) in
+                 S.mamba_cache_defs(cfg, batch_size, cfg.n_layers,
+                                    dtype).items()}
+        attn_shape = (self.n_groups, batch_size, max_len, cfg.n_kv_heads, hd)
+        return {
+            "mamba": mamba,
+            "attn_k": jnp.zeros(attn_shape, dtype),
+            "attn_v": jnp.zeros(attn_shape, dtype),
+        }
+
+    def decode_step(self, params, batch):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = L.embed(params["embed"], batch["token"], dtype)
+        cache, index = batch["cache"], batch["index"]
+        k = cfg.shared_block_every
+
+        new_mamba, new_k, new_v = [], [], []
+        for g in range(self.n_groups + (1 if self.tail else 0)):
+            lo = g * k
+            hi = min(lo + k, cfg.n_layers)
+            gp = jax.tree.map(lambda p: p[lo:hi], params["layers"])
+            gc = jax.tree.map(lambda c: c[lo:hi], cache["mamba"])
+
+            def scan_body(x, layer_in):
+                lp, c = layer_in
+                h = L.apply_norm(lp["ln"], x, cfg.norm_type, cfg.norm_eps)
+                out, nc = S.mamba_decode_step(lp["mamba"], h, c, cfg)
+                return x + out, nc
+
+            x, nm = _scan(scan_body, x, (gp, gc))
+            new_mamba.append(nm)
+            if g < self.n_groups:
+                x, nk, nv = layer_decode(params["shared"], x,
+                                         cache["attn_k"][g],
+                                         cache["attn_v"][g], index, cfg)
+                new_k.append(nk)
+                new_v.append(nv)
+
+        x = L.apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+        logits = self._logits_last(params, x[:, -1])
+        new_cache = {
+            "mamba": jax.tree.map(lambda *zs: jnp.concatenate(zs, axis=0),
+                                  *new_mamba),
+            "attn_k": jnp.stack(new_k),
+            "attn_v": jnp.stack(new_v),
+        }
+        return logits, new_cache
+
+    # ------------------------------------------------------------- layouts
+    def input_layout(self, kind: str, batch: int, seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        if kind in ("train", "prefill"):
+            out = {"tokens": ((batch, seq), jnp.int32, ("batch", "seq"))}
+            if kind == "train":
+                out["targets"] = ((batch, seq), jnp.int32, ("batch", "seq"))
+            return out
+        if kind == "decode":
+            hd = cfg.resolved_head_dim
+            attn_shape = (self.n_groups, batch, seq, cfg.n_kv_heads, hd)
+            attn_axes = A.cache_logical_axes()
+            return {
+                "token": ((batch, 1), jnp.int32, ("batch", "seq")),
+                "cache": {
+                    "mamba": S.mamba_cache_defs(cfg, batch, cfg.n_layers,
+                                                jnp.dtype(cfg.dtype)),
+                    "attn_k": (attn_shape, jnp.dtype(cfg.dtype), attn_axes),
+                    "attn_v": (attn_shape, jnp.dtype(cfg.dtype), attn_axes),
+                },
+                "index": ((), jnp.int32, ()),
+            }
+        raise ValueError(kind)

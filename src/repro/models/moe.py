@@ -1,0 +1,310 @@
+"""Mixture-of-Experts FFN: top-k routing with scatter/gather dispatch (EP).
+
+Dispatch layout: tokens are scattered into a static (E, C, D) expert buffer
+(C = capacity per expert), expert matmuls run as dense (E, C, D)×(E, D, F)
+einsums with the expert dim sharded over the model axis (expert
+parallelism), and outputs gather back to token order.
+
+Why scatter and not the Mesh-TF one-hot-einsum dispatch: the dispatch
+tensor there is (T, E, C), which at qwen3-train_4k scale (T = 1M tokens,
+E = 128, C = 82k) is ~10¹⁶ elements. The scatter formulation keeps every
+intermediate at O(T·k·D) — the (E, C, D) buffer itself is the largest
+object and shards over (experts→model, embed→data).
+
+Position-in-queue is a cumsum over the flattened (T·k, E) one-hot (Switch
+Transformer style); tokens over capacity are dropped by scatter
+``mode="drop"`` (out-of-bounds position ⇒ no write), matching
+capacity-dropping semantics. FLOPs scale with top_k·capacity_factor, not
+num_experts — the roofline sees *active* compute.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding import constrain
+
+
+def moe_defs(cfg: ModelConfig) -> L.ParamDefs:
+    e, d, f = cfg.moe.num_experts, cfg.d_model, cfg.d_ff
+    # expert tensors use their own d_model logical name so a serving
+    # layout can replicate dense weights over data (TP-only) while the
+    # expert tables stay 2-D sharded (experts×data)
+    return {
+        "router": L.Param((d, e), ("embed", "experts"), init="fan_in"),
+        "w_gate": L.Param((e, d, f), ("experts", "expert_embed", "expert_mlp"), init="fan_in"),
+        "w_up": L.Param((e, d, f), ("experts", "expert_embed", "expert_mlp"), init="fan_in"),
+        "w_down": L.Param((e, f, d), ("experts", "expert_mlp", "expert_embed"), init="fan_in"),
+    }
+
+
+def _top_k_routing(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """logits: (T, E) → (weights (T, k) renormalized, indices (T, k))."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, indices = jax.lax.top_k(gates, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, indices
+
+
+def moe_ffn(params, x: jax.Array, cfg: ModelConfig,
+            capacity_factor: float = 1.25) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (out (B, S, D), aux load-balance loss scalar).
+
+    Two execution paths:
+
+    * **GShard shard_map path** (big token counts on a real mesh): manual
+      all-to-all dispatch to expert-owner shards. XLA's SPMD partitioner
+      handles data-dependent gather/scatter by replicating the (T, D)
+      token tensor and all-reducing it — at 1M tokens that is ~17 GB × a
+      dozen buffers per device (measured; see EXPERIMENTS.md §Perf). The
+      manual path keeps every scatter local and moves exactly the
+      dispatched tokens: 2 all-to-alls + the FSDP weight all-gathers.
+    * **jnp scatter path** (single device / decode-sized T): the oracle
+      the shard_map path is tested against; pathology-free at small T.
+    """
+    from repro.sharding import current_rules
+
+    b, s, d = x.shape
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    t = b * s
+
+    rules = current_rules()
+    if rules is not None and rules.mesh is not None:
+        if t >= 32768:
+            mesh = rules.mesh
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            d_ax = rules.mesh_axes_for("batch")   # 1-2 axes: (pod?, data)
+            m_ax = rules.mesh_axes_for("act_seq")
+            dsz = 1
+            for a in d_ax:
+                dsz *= sizes[a]
+            if (len(d_ax) >= 1 and len(m_ax) == 1
+                    and e % sizes[m_ax[0]] == 0
+                    and d % sizes[d_ax[-1]] == 0
+                    and b % dsz == 0
+                    and s % sizes[m_ax[0]] == 0):
+                return _moe_ffn_sharded(params, x, cfg, capacity_factor,
+                                        mesh, tuple(d_ax), m_ax[0])
+        else:
+            # decode-scale T on a real mesh: dense one-hot dispatch —
+            # every op is an einsum (the partitioner mishandles
+            # scatter/gather in manual subgroups), and the (T, E, C)
+            # dispatch tensor is tiny at this scale
+            return _moe_ffn_onehot(params, x, cfg, capacity_factor)
+
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt, params["router"].astype(x.dtype))
+    weights, indices = _top_k_routing(logits, k)          # (T,k) f32 / i32
+
+    # Switch-style load-balance aux: mean gate mass × token fraction per E
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(gates, axis=0)
+    onehot_any = jax.nn.one_hot(indices, e, dtype=jnp.float32).sum(1)  # (T,E)
+    ce = jnp.mean(onehot_any, axis=0) / k
+    aux = e * jnp.sum(me * ce)
+
+    capacity = int(max(8, capacity_factor * k * t / e))
+    capacity = -(-capacity // 8) * 8                      # sublane-aligned
+
+    # position of each (token, slot) within its expert queue. The (T·k, E)
+    # one-hot cumsum is ordered slot-major-within-token (row t·k + j), so
+    # ranks are consistent across the per-slot loops below.
+    flat_e = indices.reshape(t * k)                       # (T·k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)   # (T·k, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - 1              # inclusive rank − 1
+    pos_all = jnp.take_along_axis(
+        pos_all, flat_e[:, None], axis=1)[:, 0].reshape(t, k)
+
+    # scatter per slot (k static loop) — avoids the (T·k, D) repeat blowup;
+    # each (T, D) intermediate shards 2-D over (data×model) via `tokens`
+    xt = constrain(xt, "tokens", None)
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    for j in range(k):
+        buf = buf.at[indices[:, j], pos_all[:, j]].add(xt, mode="drop")
+    buf = constrain(buf, "experts", "expert_cap", None)
+
+    gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(x.dtype))
+    up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(gate) * up
+    h = constrain(h, "experts", "expert_cap", "expert_mlp")
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype))
+    ye = constrain(ye, "experts", "expert_cap", None)
+
+    # gather back per slot; dropped (over-capacity) slots contribute 0
+    out = jnp.zeros((t, d), x.dtype)
+    for j in range(k):
+        pos_j = pos_all[:, j]
+        kept = (pos_j < capacity).astype(weights.dtype)
+        yt = ye[indices[:, j], jnp.minimum(pos_j, capacity - 1)]   # (T, D)
+        yt = constrain(yt, "tokens", None)
+        out = out + yt * (weights[:, j] * kept)[:, None].astype(yt.dtype)
+    out = out.reshape(b, s, d)
+    return constrain(out, "batch", "act_seq", "embed"), aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# GShard-style expert parallelism (manual collectives)
+# ---------------------------------------------------------------------------
+
+def _moe_ffn_sharded(params, x: jax.Array, cfg: ModelConfig,
+                     capacity_factor: float, mesh, data_axes,
+                     model_axis: str) -> Tuple[jax.Array, jax.Array]:
+    """Full-manual shard_map over (data, model).
+
+    Layout: tokens sharded (batch→data, seq→model); experts owned by model
+    shards (E_loc = E/M each); expert weights FSDP-sharded over data on
+    the d_model dim. Per (data, model) shard:
+
+      route local tokens → scatter into a (E, C_s, D) send buffer
+      → all-to-all over model (tokens travel to their expert's owner)
+      → all-gather expert weights over data (FSDP) → expert matmuls
+      → reverse all-to-all → local weighted combine.
+
+    C_s = per-(expert, source-shard) capacity = ⌈cf·k·T_loc/E⌉, so global
+    capacity matches the jnp path's ⌈cf·k·T/E⌉ in expectation. Wire cost:
+    2 × (E·C_s·D) bytes per shard per direction — the honest MoE a2a.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    b, s, d = x.shape
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    if isinstance(data_axes, str):
+        data_axes = (data_axes,)
+    fsdp_axis = data_axes[-1]        # weights FSDP-shard over the last one
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msz = sizes[model_axis]
+    dsz = 1
+    for a in data_axes:
+        dsz *= sizes[a]
+    e_loc = e // msz
+    t_loc = (b // dsz) * (s // msz)
+    cap = int(max(8, capacity_factor * k * t_loc / e))
+    cap = -(-cap // 8) * 8
+
+    def body(x_loc, router, wg, wu, wd):
+        b_loc, s_loc, _ = x_loc.shape
+        tl = b_loc * s_loc
+        xt = x_loc.reshape(tl, d)
+
+        logits = jnp.einsum("td,de->te", xt, router.astype(xt.dtype))
+        weights, indices = _top_k_routing(logits, k)
+
+        gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        me = jax.lax.pmean(jnp.mean(gates, axis=0),
+                           data_axes + (model_axis,))
+        onehot_any = jax.nn.one_hot(indices, e, dtype=jnp.float32).sum(1)
+        ce = jax.lax.pmean(jnp.mean(onehot_any, axis=0) / k,
+                           data_axes + (model_axis,))
+        aux = e * jnp.sum(me * ce)
+
+        # local ranks within each expert queue
+        flat_e = indices.reshape(tl * k)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        pos = jnp.take_along_axis(
+            pos, flat_e[:, None], axis=1)[:, 0].reshape(tl, k)
+
+        # local scatter into the send buffer (E, C_s, D)
+        buf = jnp.zeros((e, cap, d), x_loc.dtype)
+        for j in range(k):
+            buf = buf.at[indices[:, j], pos[:, j]].add(xt, mode="drop")
+
+        # dispatch: tokens travel to their expert's owner shard
+        buf = buf.reshape(msz, e_loc, cap, d)
+        recv = jax.lax.all_to_all(buf, model_axis, 0, 0, tiled=True)
+        xe = recv.reshape(msz, e_loc, cap, d).transpose(1, 0, 2, 3)
+        xe = xe.reshape(e_loc, msz * cap, d)          # (E_loc, C_eff, D)
+
+        # FSDP: gather the d_model shards of this shard's expert weights
+        wg_f = jax.lax.all_gather(wg, fsdp_axis, axis=1, tiled=True)
+        wu_f = jax.lax.all_gather(wu, fsdp_axis, axis=1, tiled=True)
+        wd_f = jax.lax.all_gather(wd, fsdp_axis, axis=2, tiled=True)
+
+        dt = xe.dtype
+        gate = jnp.einsum("ecd,edf->ecf", xe, wg_f.astype(dt))
+        up = jnp.einsum("ecd,edf->ecf", xe, wu_f.astype(dt))
+        h = jax.nn.silu(gate) * up
+        ye = jnp.einsum("ecf,efd->ecd", h, wd_f.astype(dt))
+
+        # return trip
+        ye = ye.reshape(e_loc, msz, cap, d).transpose(1, 0, 2, 3)
+        back = jax.lax.all_to_all(ye, model_axis, 0, 0, tiled=True)
+        ye_all = back.reshape(e, cap, d)
+
+        # local weighted combine; over-capacity slots contribute 0
+        out = jnp.zeros((tl, d), x_loc.dtype)
+        for j in range(k):
+            pos_j = pos[:, j]
+            kept = (pos_j < cap).astype(weights.dtype)
+            yt = ye_all[indices[:, j], jnp.minimum(pos_j, cap - 1)]
+            out = out + yt * (weights[:, j] * kept)[:, None].astype(yt.dtype)
+        return out.reshape(b_loc, s_loc, d), aux
+
+    bspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    shmapped = jax.shard_map(
+        body,                       # context mesh (nests under pod-manual)
+        in_specs=(P(bspec, model_axis, None),            # x
+                  P(None, None),                          # router (gathered)
+                  P(model_axis, fsdp_axis, None),         # w_gate (E, D, F)
+                  P(model_axis, fsdp_axis, None),         # w_up
+                  P(model_axis, None, fsdp_axis)),        # w_down (E, F, D)
+        out_specs=(P(bspec, model_axis, None), P()),
+        axis_names=set(data_axes) | {model_axis}, check_vma=False)
+
+    out, aux = shmapped(x, params["router"], params["w_gate"],
+                        params["w_up"], params["w_down"])
+    from repro.sharding import constrain
+    out = constrain(out, "batch", "act_seq", "embed")
+    return out, aux.astype(jnp.float32)
+
+
+def _moe_ffn_onehot(params, x: jax.Array, cfg: ModelConfig,
+                    capacity_factor: float) -> Tuple[jax.Array, jax.Array]:
+    """Dense one-hot dispatch (Mesh-TF style) — decode-scale T only.
+
+    The (T, E, C) dispatch/combine tensors make this formulation
+    quadratic-memory at training scale, but at decode (T ≤ a few k) they
+    are KBs and every op partitions cleanly as an einsum.
+    """
+    b, s, d = x.shape
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt, params["router"].astype(x.dtype))
+    weights, indices = _top_k_routing(logits, k)
+
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(gates, axis=0)
+    onehot_e = jax.nn.one_hot(indices, e, dtype=jnp.float32)   # (T, k, E)
+    ce = jnp.mean(onehot_e.sum(1), axis=0) / k
+    aux = e * jnp.sum(me * ce)
+
+    cap = int(max(8, capacity_factor * k * t / e))
+    cap = -(-cap // 8) * 8
+
+    # rank within expert queue, computed entirely with reductions
+    flat = onehot_e.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) - 1.0                      # (T·k, E)
+    pos = jnp.sum(pos * flat, axis=1).reshape(t, k)           # (T, k)
+    kept = (pos < cap).astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap,
+                            dtype=jnp.float32)                # (T, k, C)
+
+    disp = jnp.einsum("tke,tkc->tec", onehot_e, pos_oh * kept[..., None])
+    comb = jnp.einsum("tke,tkc->tec", onehot_e,
+                      pos_oh * (weights * kept)[..., None])
+
+    dt = x.dtype
+    xe = jnp.einsum("td,tec->ecd", xt, disp.astype(dt))
+    gate = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(dt))
+    up = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(dt))
+    h = jax.nn.silu(gate) * up
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dt))
+    out = jnp.einsum("ecd,tec->td", ye, comb.astype(dt)).reshape(b, s, d)
+    return constrain(out, "batch", "act_seq", "embed"), aux.astype(jnp.float32)

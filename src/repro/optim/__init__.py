@@ -1,0 +1,15 @@
+from repro.optim.optimizers import (
+    OptState,
+    init_opt_state,
+    make_schedule,
+    opt_state_axes,
+    apply_updates,
+)
+
+__all__ = [
+    "OptState",
+    "init_opt_state",
+    "make_schedule",
+    "opt_state_axes",
+    "apply_updates",
+]

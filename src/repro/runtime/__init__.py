@@ -1,0 +1,3 @@
+from repro.runtime.ft import StepRunner, StragglerWatchdog, FaultInjector
+
+__all__ = ["StepRunner", "StragglerWatchdog", "FaultInjector"]

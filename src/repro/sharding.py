@@ -1,0 +1,186 @@
+"""Logical-axis sharding: rules map logical dim names → mesh axes.
+
+Model code annotates arrays with *logical* axis names (``("batch", "seq",
+"embed")``); the active :class:`ShardingRules` decides which mesh axis each
+logical name lands on, with automatic fallback to replication when a dim
+size is not divisible by the mesh axis size (e.g. smollm's 15 heads on a
+16-way model axis).
+
+Usage::
+
+    with use_rules(rules_for(mesh_cfg), mesh):
+        y = constrain(y, "batch", "seq", "embed")
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import MeshConfig
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Default logical→mesh assignment. "fsdp" role rides the data axis; tensor
+# parallel rides the model axis; the local-SGD replica dim rides the pod axis.
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "replica": ("pod",),
+    "batch": ("data",),
+    "seq": (),
+    # Megatron-SP: the residual stream / norm activations are sharded along
+    # sequence over the model axis (XLA inserts the all-gather before
+    # attention/MLP and the reduce-scatter after) — keeps the per-layer scan
+    # carry at S/16 per device for the 4k/32k train cells.
+    "act_seq": ("model",),
+    # context-parallel attention: shard the q-chunk seq dim over model —
+    # OFF by default; the §Perf hillclimb enables it for archs whose head
+    # counts don't divide the model axis (attention compute/scores would
+    # otherwise replicate across it)
+    "attn_q_seq": (),
+    # grouped-query attention score layout (B, kv, g, s, t): prefer sharding
+    # kv heads; when kv doesn't divide the axis (GQA kv=2..8 on a 16-wide
+    # model axis) fall through to the q-group dim. spec_for's divisibility +
+    # used-axis logic implements the preference order automatically.
+    "q_group": ("model",),
+    # flattened token dim (B·S): inherits BOTH the batch (data) and act_seq
+    # (model) factors — 256-way sharding for MoE dispatch intermediates
+    "tokens": ("data", "model"),
+    "cache_seq": ("model",),      # sequence-sharded KV cache (flash-decode)
+    "embed": ("data",),           # FSDP shard of the contraction dim
+    "embed_tp": ("model",),       # 2D-sharded weights for serving
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_embed": ("data",),     # MoE tables' d_model dim (FSDP)
+    "expert_cap": ("data",),      # MoE expert-buffer capacity dim
+    "expert_mlp": (),
+    "layers": (),
+    "ssm_state": (),
+    "ssm_heads": ("model",),
+    "conv": (),
+    "stats": (),
+}
+
+
+class ShardingRules:
+    def __init__(self, rules: Dict[str, Tuple[str, ...]], mesh: Optional[Mesh]):
+        self.rules = dict(rules)
+        self.mesh = mesh
+        self._axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+
+    def mesh_axes_for(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        axes = self.rules.get(logical, ())
+        if axes is None:
+            return ()
+        if isinstance(axes, str):
+            axes = (axes,)
+        # drop axes absent from the mesh (e.g. "pod" on the single-pod mesh)
+        return tuple(a for a in axes if a in self._axis_sizes)
+
+    def would_shard(self, logical: Optional[str], size: int) -> bool:
+        """True if this logical dim of the given size actually shards."""
+        axes = self.mesh_axes_for(logical)
+        if not axes:
+            return False
+        total = 1
+        for a in axes:
+            total *= self._axis_sizes.get(a, 1)
+        return total > 1 and size % total == 0
+
+    def spec_for(self, logical_axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for one array; replicates non-divisible dims."""
+        entries = []
+        used: set = set()
+        for i, name in enumerate(logical_axes):
+            axes = tuple(a for a in self.mesh_axes_for(name) if a not in used)
+            if shape is not None and axes:
+                size = 1
+                for a in axes:
+                    size *= self._axis_sizes.get(a, 1)
+                if size and shape[i] % size != 0:
+                    axes = ()
+            used.update(axes)
+            if len(axes) == 0:
+                entries.append(None)
+            elif len(axes) == 1:
+                entries.append(axes[0])
+            else:
+                entries.append(axes)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding_for(self, logical_axes: Sequence[Optional[str]],
+                     shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec_for(logical_axes, shape))
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules):
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def rules_for(mesh_cfg: MeshConfig, mesh: Optional[Mesh],
+              overrides: Optional[Dict[str, Tuple[str, ...]]] = None) -> ShardingRules:
+    rules = dict(DEFAULT_RULES)
+    # remap the role axes onto this mesh's axis names
+    remap = {"data": mesh_cfg.data_axis, "model": mesh_cfg.model_axis,
+             "pod": mesh_cfg.replica_axis or "pod"}
+    rules = {k: tuple(remap.get(a, a) for a in (v if not isinstance(v, str) else (v,)))
+             if v else ()
+             for k, v in rules.items()}
+    if overrides:
+        rules.update(overrides)
+    return ShardingRules(rules, mesh)
+
+
+def strip_axes(rules: ShardingRules, axes) -> ShardingRules:
+    """Rules with the given mesh axes removed from every mapping — used
+    inside shard_map bodies where those axes are manual (sharding
+    constraints may only reference Auto axes)."""
+    axes = set(axes)
+    stripped = {k: tuple(a for a in (v if not isinstance(v, str) else (v,))
+                         if a not in axes)
+                for k, v in rules.rules.items()}
+    return ShardingRules(stripped, rules.mesh)
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Sharding constraint by logical names; no-op when no rules active."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.spec_for(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def tree_specs(logical_tree, shapes_tree, rules: ShardingRules):
+    """Map a pytree of logical-axis tuples (+ matching shapes) to PartitionSpecs."""
+    return jax.tree.map(
+        lambda la, shp: rules.spec_for(la, shp),
+        logical_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )

@@ -1,0 +1,76 @@
+"""MSF auto-tuner: the paper's manual sweep as an algorithm."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import SyncConfig
+from repro.core.autotune import (TuneInputs, choose_period, drift_cap,
+                                 predicted_step_time, report, sync_time_s)
+
+
+def _qwen3_2pod():
+    """The §Perf cell-C numbers: 235B over 512 chips, 2-pod DCN sync."""
+    return TuneInputs(
+        param_bytes_per_chip=int(235e9 * 4 / 256),   # fp32 master, per chip
+        replicas=2,
+        step_time_s=0.090,        # ~compute-bound step at 256 chips/pod
+        link_bw=6.25e9,
+        grad_norm=1.0, param_norm=100.0, lr=3e-4)
+
+
+class TestCostModel:
+    def test_sync_time_matches_cell_c(self):
+        """Analytic DCN sync ≈ the measured C0 per-sync wire time."""
+        t = sync_time_s(_qwen3_2pod(), SyncConfig())
+        # measured C0: 4.35 GB/step / 6.25 GB/s ≈ 0.70 s
+        assert 0.4 < t < 0.8, t
+
+    def test_compression_ordering(self):
+        inp = _qwen3_2pod()
+        t_fp32 = sync_time_s(inp, SyncConfig())
+        t_int16 = sync_time_s(inp, SyncConfig(compression="int16"))
+        t_int8 = sync_time_s(inp, SyncConfig(compression="int8"))
+        assert t_int8 < t_int16 < t_fp32
+        assert t_int16 == pytest.approx(t_fp32 / 2, rel=0.01)
+
+    def test_overhead_meets_target(self):
+        inp = _qwen3_2pod()
+        cfg = SyncConfig(strategy="hierarchical")
+        h = choose_period(inp, cfg, target_overhead=0.05, max_drift=1.0)
+        overhead = sync_time_s(inp, cfg) / h / inp.step_time_s
+        assert overhead <= 0.05
+        # smallest such H: H−1 must violate the target
+        if h > 1:
+            assert sync_time_s(inp, cfg) / (h - 1) / inp.step_time_s > 0.05
+
+    def test_drift_cap_binds(self):
+        inp = TuneInputs(param_bytes_per_chip=10**9, replicas=2,
+                         step_time_s=1e-4, link_bw=6.25e9,
+                         grad_norm=10.0, param_norm=1.0, lr=1e-2)
+        # huge comm need, but drift per step = 0.1 → cap at max_drift/0.1
+        h = choose_period(inp, max_drift=0.01)
+        assert h == drift_cap(inp, 0.01) == 1  # 0.01/0.1 < 1 → clamp to 1
+
+    def test_predicted_time_monotone_in_h(self):
+        inp = _qwen3_2pod()
+        cfg = SyncConfig()
+        ts = [predicted_step_time(inp, cfg, h) for h in (1, 2, 8, 64)]
+        assert ts == sorted(ts, reverse=True)
+
+    def test_report_shape(self):
+        rep = report(_qwen3_2pod())
+        assert rep["chosen_h"] >= 1
+        assert set(rep) >= {"sync_time_s", "chosen_h", "ladder"}
+
+
+@settings(deadline=None, max_examples=50)
+@given(p=st.integers(10**6, 10**11), k=st.integers(2, 64),
+       step=st.floats(1e-3, 10.0), bw=st.sampled_from([6.25e9, 50e9]))
+def test_choose_period_properties(p, k, step, bw):
+    """Property: chosen H always ≥1, and the resulting overhead is ≤ the
+    target whenever the drift cap doesn't bind."""
+    inp = TuneInputs(param_bytes_per_chip=p, replicas=k, step_time_s=step,
+                     link_bw=bw, grad_norm=1e-6, param_norm=1.0, lr=1e-6)
+    cfg = SyncConfig()
+    h = choose_period(inp, cfg, target_overhead=0.1, max_drift=0.5)
+    assert h >= 1
+    assert sync_time_s(inp, cfg) / h / step <= 0.1 * 1.001

@@ -1,0 +1,95 @@
+"""Checkpoint manager + elastic reshaping."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, rescale_replicated_state
+from repro.checkpoint.elastic import add_replica_dim, drop_replica_dim
+from repro.config import CheckpointConfig
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+                   "b": jnp.asarray(rng.normal(size=(8,)), jnp.float32)},
+        "opt": {"mu": {"w": jnp.zeros((4, 8)), "b": jnp.zeros(8)}},
+        "step": jnp.int32(7),
+    }
+
+
+class TestManager:
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path)))
+        s = _state()
+        mgr.save(7, s, extra={"data": {"step": 7}})
+        like = jax.tree.map(jnp.zeros_like, s)
+        restored, extra = mgr.restore(like)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), s, restored)
+        assert extra == {"data": {"step": 7}}
+
+    def test_latest_and_keep_last(self, tmp_path):
+        mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path),
+                                                 keep_last=2))
+        for step in (1, 2, 3, 4):
+            mgr.save(step, _state(step))
+        assert mgr.latest_step() == 4
+        assert mgr.all_steps() == [3, 4]
+
+    def test_async_write(self, tmp_path):
+        mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path),
+                                                 async_write=True))
+        s = _state()
+        mgr.save(1, s)
+        mgr.wait()
+        restored, _ = mgr.restore(jax.tree.map(jnp.zeros_like, s))
+        np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                      np.asarray(s["params"]["w"]))
+
+    def test_fingerprint_mismatch_raises(self, tmp_path):
+        mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path)))
+        s = _state()
+        mgr.save(1, s, fingerprint="abc")
+        with pytest.raises(ValueError, match="fingerprint"):
+            mgr.restore(s, expected_fingerprint="def")
+
+    def test_no_tmp_dirs_left(self, tmp_path):
+        mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path)))
+        mgr.save(1, _state())
+        assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+
+    def test_missing_checkpoint_raises(self, tmp_path):
+        mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path)))
+        with pytest.raises(FileNotFoundError):
+            mgr.restore(_state())
+
+
+class TestElastic:
+    def test_shrink_averages(self):
+        s = {"w": jnp.stack([jnp.ones(4), 3 * jnp.ones(4)])}
+        out = rescale_replicated_state(s, 2, 1)
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   2 * np.ones((1, 4)))
+
+    def test_grow_broadcasts_average(self):
+        s = {"w": jnp.stack([jnp.ones(4), 3 * jnp.ones(4)])}
+        out = rescale_replicated_state(s, 2, 4)
+        assert out["w"].shape == (4, 4)
+        np.testing.assert_allclose(np.asarray(out["w"]), 2.0)
+
+    def test_add_then_drop_is_identity(self):
+        s = {"w": jnp.arange(6.0).reshape(2, 3)}
+        up = add_replica_dim(s, 4)
+        assert up["w"].shape == (4, 2, 3)
+        down = drop_replica_dim(up)
+        np.testing.assert_allclose(np.asarray(down["w"]), np.asarray(s["w"]))
+
+    def test_scalar_leaves_pass_through(self):
+        s = {"step": jnp.int32(5), "w": jnp.ones((2, 3))}
+        out = rescale_replicated_state(s, 2, 3)
+        assert int(out["step"]) == 5
+        assert out["w"].shape == (3, 3)

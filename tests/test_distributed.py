@@ -1,0 +1,144 @@
+"""Multi-device correctness (subprocess, 8 host devices): the sharded
+execution paths must match their single-device oracles."""
+import pytest
+
+from conftest import run_with_devices
+
+
+class TestShardedMoE:
+    def test_gshard_path_matches_jnp_oracle(self):
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import ModelConfig, MoEConfig, MeshConfig
+from repro.models import moe as M
+from repro.models.layers import init_params
+from repro.sharding import rules_for, use_rules
+from repro.launch.mesh import make_test_mesh
+cfg = ModelConfig(name="t", family="moe", d_model=32, d_ff=16,
+                  moe=MoEConfig(num_experts=8, top_k=2))
+mesh = make_test_mesh((2, 4))
+rules = rules_for(MeshConfig(shape=(2, 4), axis_names=("data", "model")), mesh)
+params = init_params(M.moe_defs(cfg), jax.random.key(0))
+x = jax.random.normal(jax.random.key(1), (8, 4096, 32), jnp.float32)
+ref, aux_ref = M.moe_ffn(params, x, cfg)          # no mesh → jnp oracle
+def loss(p, x):
+    out, aux = M.moe_ffn(p, x, cfg)
+    return jnp.mean(out ** 2) + 0.01 * aux
+g_ref = jax.grad(loss)(params, x)
+with jax.set_mesh(mesh), use_rules(rules):
+    out, aux = jax.jit(lambda p, x: M.moe_ffn(p, x, cfg))(params, x)
+    g = jax.jit(jax.grad(loss))(params, x)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3, atol=1e-5)
+np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-5)
+for k in g:
+    np.testing.assert_allclose(np.asarray(g[k]), np.asarray(g_ref[k]),
+                               rtol=1e-3, atol=1e-5)
+print("OK")
+"""
+        assert "OK" in run_with_devices(code)
+
+    def test_onehot_path_matches_scatter_path(self):
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import ModelConfig, MoEConfig
+from repro.models import moe as M
+from repro.models.layers import init_params
+cfg = ModelConfig(name="t", family="moe", d_model=16, d_ff=8,
+                  moe=MoEConfig(num_experts=4, top_k=2))
+params = init_params(M.moe_defs(cfg), jax.random.key(0))
+x = jax.random.normal(jax.random.key(1), (2, 64, 16), jnp.float32)
+a, aux_a = M.moe_ffn(params, x, cfg)                # scatter path (no mesh)
+b, aux_b = M._moe_ffn_onehot(params, x, cfg, 1.25)  # dense one-hot path
+np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+np.testing.assert_allclose(float(aux_a), float(aux_b), rtol=1e-5)
+print("OK")
+"""
+        assert "OK" in run_with_devices(code, n_devices=1)
+
+
+class TestShardedEmbed:
+    def test_manual_vocab_parallel_matches_gather(self):
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import MeshConfig
+from repro.models import layers as L
+from repro.sharding import rules_for, use_rules
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((2, 4))
+rules = rules_for(MeshConfig(shape=(2, 4), axis_names=("data", "model")), mesh)
+v, d = 64, 16
+table = jax.random.normal(jax.random.key(0), (v, d), jnp.float32)
+tokens = jax.random.randint(jax.random.key(1), (8, 4096), 0, v)
+want = table[tokens]
+with jax.set_mesh(mesh), use_rules(rules):
+    got = jax.jit(lambda t, tok: L.embed({"embedding": t}, tok,
+                                         jnp.float32))(table, tokens)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                           atol=1e-6)
+print("OK")
+"""
+        assert "OK" in run_with_devices(code)
+
+
+class TestFlashDecode:
+    def test_seq_sharded_decode_matches_local(self):
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import MeshConfig
+from repro.models import attention as A
+from repro.sharding import rules_for, use_rules
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((2, 4))
+rules = rules_for(MeshConfig(shape=(2, 4), axis_names=("data", "model")), mesh)
+b, s, h, kv, hd = 4, 64, 4, 2, 16
+q = jax.random.normal(jax.random.key(0), (b, 1, h, hd), jnp.float32)
+k = jax.random.normal(jax.random.key(1), (b, s, kv, hd), jnp.float32)
+v = jax.random.normal(jax.random.key(2), (b, s, kv, hd), jnp.float32)
+idx = jnp.int32(37)
+want = A.decode_attention(q, k, v, idx)             # no mesh → local math
+with jax.set_mesh(mesh), use_rules(rules):
+    got = jax.jit(lambda q, k, v: A.decode_attention(q, k, v, idx))(q, k, v)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                           atol=1e-5)
+print("OK")
+"""
+        assert "OK" in run_with_devices(code)
+
+
+class TestDDPStep:
+    def test_sharded_loss_matches_single_device(self):
+        """One DDP step on a (4,2) mesh must match the unsharded step."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import (MeshConfig, OptimizerConfig, SyncConfig,
+                          TrainConfig, DataConfig, get_smoke)
+from repro.core import local_sgd as LS
+from repro.models.registry import build_model
+from repro.sharding import rules_for
+from repro.launch.mesh import make_test_mesh
+cfg0 = get_smoke("qwen2.5-3b")
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, 512, (8, 32)), jnp.int32),
+         "targets": jnp.asarray(rng.integers(0, 512, (8, 32)), jnp.int32)}
+
+def run(shape, names):
+    mesh = make_test_mesh(shape, names)
+    mesh_cfg = MeshConfig(shape=shape, axis_names=names)
+    cfg = TrainConfig(model=cfg0, mesh=mesh_cfg,
+                      optimizer=OptimizerConfig(name="sgd", learning_rate=0.1),
+                      data=DataConfig(seq_len=32, global_batch=8))
+    model = build_model(cfg.model)
+    with jax.set_mesh(mesh):
+        state = LS.init_state(model, cfg, jax.random.key(0))
+        step = LS.make_ddp_step(model, cfg, mesh)
+        state, metrics = jax.jit(step)(state, batch)
+        return float(metrics["loss"]), jax.device_get(state["params"])
+
+l1, p1 = run((1, 1), ("data", "model"))
+l8, p8 = run((4, 2), ("data", "model"))
+assert abs(l1 - l8) / abs(l1) < 1e-3, (l1, l8)
+for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p8)):
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-4)
+print("OK", l1, l8)
+"""
+        assert "OK" in run_with_devices(code)

@@ -1,0 +1,131 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+RNG = np.random.default_rng(42)
+
+
+class TestHinge:
+    @pytest.mark.parametrize("n,d", [(8, 8), (100, 22), (257, 254),
+                                     (512, 2000), (64, 128), (33, 7)])
+    @pytest.mark.parametrize("dtype", [jnp.float32])
+    def test_matches_ref(self, n, d, dtype):
+        from repro.kernels.hinge import ops, ref
+        x = jnp.asarray(RNG.normal(size=(n, d)), dtype)
+        y = jnp.asarray(np.where(RNG.random(n) > 0.5, 1.0, -1.0), dtype)
+        w = jnp.asarray(RNG.normal(size=d), dtype)
+        got = ops.hinge_block_grad(w, x, y, 1.0)
+        want = ref.hinge_block_grad(w, x, y, 1.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_c_scaling(self):
+        from repro.kernels.hinge import ops, ref
+        x = jnp.asarray(RNG.normal(size=(64, 16)), jnp.float32)
+        y = jnp.asarray(np.where(RNG.random(64) > 0.5, 1.0, -1.0), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=16), jnp.float32)
+        for c in (0.1, 1.0, 10.0):
+            np.testing.assert_allclose(
+                np.asarray(ops.hinge_block_grad(w, x, y, c)),
+                np.asarray(ref.hinge_block_grad(w, x, y, c)),
+                rtol=1e-4, atol=1e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,sq,sk,h,kv,dh,causal,pref", [
+        (1, 128, 128, 4, 2, 64, True, 0),
+        (2, 256, 256, 8, 8, 128, True, 0),
+        (1, 200, 200, 6, 2, 64, True, 0),        # unaligned seq
+        (1, 128, 128, 4, 1, 64, True, 32),        # MQA + prefix-LM
+        (2, 64, 300, 4, 4, 64, False, 0),         # cross attn, padded keys
+        (1, 512, 512, 2, 2, 32, True, 0),         # dh below lane width
+    ])
+    def test_matches_ref(self, b, sq, sk, h, kv, dh, causal, pref):
+        from repro.kernels.flash_attention import ops, ref
+        q = jnp.asarray(RNG.normal(size=(b, sq, h, dh)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(b, sk, kv, dh)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(b, sk, kv, dh)), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=causal, prefix_len=pref)
+        want = ref.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=causal,
+                             prefix_len=pref).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=2e-5)
+
+    def test_bf16(self):
+        from repro.kernels.flash_attention import ops, ref
+        q = jnp.asarray(RNG.normal(size=(1, 128, 4, 64)), jnp.bfloat16)
+        k = jnp.asarray(RNG.normal(size=(1, 128, 2, 64)), jnp.bfloat16)
+        v = jnp.asarray(RNG.normal(size=(1, 128, 2, 64)), jnp.bfloat16)
+        got = ops.flash_attention(q, k, v, causal=True)
+        want = ref.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3),
+                             causal=True).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("b,l,h,p,n,chunk", [
+        (1, 128, 2, 64, 128, 64),
+        (2, 256, 4, 64, 128, 128),
+        (1, 200, 2, 64, 64, 128),                 # unaligned L
+        (1, 512, 1, 128, 128, 256),
+        (2, 64, 3, 32, 16, 32),
+    ])
+    def test_matches_exact_recurrence(self, b, l, h, p, n, chunk):
+        from repro.kernels.ssd import ops, ref
+        x = jnp.asarray(RNG.normal(size=(b, l, h, p)), jnp.float32)
+        dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(b, l, h)), jnp.float32)
+        a = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+        bm = jnp.asarray(RNG.normal(size=(b, l, n)), jnp.float32)
+        cm = jnp.asarray(RNG.normal(size=(b, l, n)), jnp.float32)
+        ya, sa = ops.ssd_scan(x, dt, a, bm, cm, chunk=chunk)
+        yb, sb = ref.ssd_scan(x, dt, a, bm, cm)
+        np.testing.assert_allclose(np.asarray(ya), np.asarray(yb),
+                                   rtol=1e-3, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(sa), np.asarray(sb),
+                                   rtol=1e-3, atol=2e-4)
+
+    def test_jnp_chunked_twin_matches(self):
+        """models/ssm.ssd_chunked (the XLA path) vs kernel ref."""
+        from repro.kernels.ssd import ref
+        from repro.models.ssm import ssd_chunked
+        b, l, h, p, n = 2, 96, 2, 16, 8
+        x = jnp.asarray(RNG.normal(size=(b, l, h, p)), jnp.float32)
+        dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(b, l, h)), jnp.float32)
+        a = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+        bm = jnp.asarray(RNG.normal(size=(b, l, n)), jnp.float32)
+        cm = jnp.asarray(RNG.normal(size=(b, l, n)), jnp.float32)
+        ya, sa = ssd_chunked(x, dt, a, bm, cm, chunk=32)
+        yb, sb = ref.ssd_scan(x, dt, a, bm, cm)
+        np.testing.assert_allclose(np.asarray(ya), np.asarray(yb),
+                                   rtol=1e-3, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(sa), np.asarray(sb),
+                                   rtol=1e-3, atol=2e-4)
+
+
+class TestQuant:
+    @pytest.mark.parametrize("shape", [(100,), (33, 7), (2, 3, 5), (4096,),
+                                       (128, 128)])
+    def test_roundtrip_matches_ref(self, shape):
+        from repro.kernels.quant import ops, ref
+        x = jnp.asarray(RNG.normal(size=shape), jnp.float32)
+        qa, sa = ops.quantize(x)
+        qb, sb = ref.quantize(x)
+        assert np.array_equal(np.asarray(qa), np.asarray(qb))
+        np.testing.assert_allclose(float(sa), float(sb), rtol=1e-6)
+        da = ops.dequantize(qa, sa)
+        db = ref.dequantize(qb, sb)
+        np.testing.assert_allclose(np.asarray(da), np.asarray(db), rtol=1e-6)
+
+    def test_quantization_error_bound(self):
+        from repro.kernels.quant import ops
+        x = jnp.asarray(RNG.normal(size=(1000,)), jnp.float32)
+        q, s = ops.quantize(x)
+        err = np.abs(np.asarray(ops.dequantize(q, s)) - np.asarray(x))
+        assert err.max() <= float(s) / 2 + 1e-6

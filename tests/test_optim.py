@@ -1,0 +1,159 @@
+"""Optimizers and schedules (incl. the paper's α = 1/(1+t))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import OptimizerConfig
+from repro.optim import apply_updates, init_opt_state, make_schedule
+
+
+def _params():
+    rng = np.random.default_rng(0)
+    return {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+
+
+def _grads():
+    rng = np.random.default_rng(1)
+    return {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+
+
+class TestSchedules:
+    def test_paper_inverse(self):
+        s = make_schedule(OptimizerConfig(schedule="paper_inverse",
+                                          learning_rate=1.0))
+        for t in (0, 1, 9, 99):
+            assert float(s(jnp.int32(t))) == pytest.approx(1.0 / (1 + t))
+
+    def test_cosine_endpoints(self):
+        cfg = OptimizerConfig(schedule="cosine", learning_rate=1e-3,
+                              warmup_steps=10, total_steps=100)
+        s = make_schedule(cfg)
+        assert float(s(jnp.int32(0))) == 0.0
+        assert float(s(jnp.int32(10))) == pytest.approx(1e-3)
+        assert float(s(jnp.int32(100))) == pytest.approx(0.0, abs=1e-9)
+
+    def test_constant(self):
+        s = make_schedule(OptimizerConfig(schedule="constant",
+                                          learning_rate=0.5))
+        assert float(s(jnp.int32(1234))) == 0.5
+
+
+class TestAdamW:
+    def test_first_step_matches_reference(self):
+        cfg = OptimizerConfig(name="adamw", learning_rate=1e-2, beta1=0.9,
+                              beta2=0.999, eps=1e-8, schedule="constant")
+        p, g = _params(), _grads()
+        st0 = init_opt_state(cfg, p)
+        p1, st1 = apply_updates(cfg, g, st0, p, jnp.int32(0))
+        # bias-corrected first step ≈ −lr · sign-ish(g)
+        for k in p:
+            m = 0.1 * np.asarray(g[k]) / (1 - 0.9)
+            v = 0.001 * np.asarray(g[k]) ** 2 / (1 - 0.999)
+            want = np.asarray(p[k]) - 1e-2 * m / (np.sqrt(v) + 1e-8)
+            np.testing.assert_allclose(np.asarray(p1[k]), want, rtol=1e-4)
+
+    def test_weight_decay_decoupled(self):
+        cfg = OptimizerConfig(name="adamw", learning_rate=1e-2,
+                              weight_decay=0.1, schedule="constant")
+        p = _params()
+        zero_g = jax.tree.map(jnp.zeros_like, p)
+        st0 = init_opt_state(cfg, p)
+        p1, _ = apply_updates(cfg, zero_g, st0, p, jnp.int32(0))
+        for k in p:
+            np.testing.assert_allclose(np.asarray(p1[k]),
+                                       np.asarray(p[k]) * (1 - 1e-3),
+                                       rtol=1e-5)
+
+    def test_bf16_moments(self):
+        cfg = OptimizerConfig(name="adamw", moment_dtype="bfloat16")
+        st0 = init_opt_state(cfg, _params())
+        assert all(x.dtype == jnp.bfloat16
+                   for x in jax.tree.leaves(st0))
+
+
+class TestClip:
+    @settings(deadline=None, max_examples=20)
+    @given(scale=st.floats(0.1, 100.0))
+    def test_global_norm_clip(self, scale):
+        cfg = OptimizerConfig(name="sgd", learning_rate=1.0, grad_clip=1.0,
+                              schedule="constant")
+        p = {"w": jnp.zeros(8)}
+        g = {"w": jnp.full(8, scale / np.sqrt(8), jnp.float32)}
+        p1, _ = apply_updates(cfg, g, {}, p, jnp.int32(0))
+        step_norm = float(jnp.linalg.norm(p1["w"]))
+        assert step_norm <= min(scale, 1.0) * 1.01
+
+
+class TestMomentum:
+    def test_accumulates(self):
+        cfg = OptimizerConfig(name="momentum", learning_rate=1.0,
+                              momentum=0.5, schedule="constant")
+        p = {"w": jnp.zeros(2)}
+        g = {"w": jnp.ones(2)}
+        st0 = init_opt_state(cfg, p)
+        p1, st1 = apply_updates(cfg, g, st0, p, jnp.int32(0))
+        p2, st2 = apply_updates(cfg, g, st1, p1, jnp.int32(1))
+        # mu1 = 1, step1 = -1; mu2 = 1.5, step2 = -1.5 → p2 = -2.5
+        np.testing.assert_allclose(np.asarray(p2["w"]), -2.5, rtol=1e-6)
+
+
+class TestElasticContinuation:
+    def test_grow_replicas_and_continue(self):
+        """A local-SGD state saved at K=2 replicas restores at K=4 and
+        keeps training — the elastic-resize path end to end."""
+        from conftest import run_with_devices
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.checkpoint import rescale_replicated_state
+from repro.config import (MeshConfig, OptimizerConfig, SyncConfig,
+                          TrainConfig, DataConfig, get_smoke)
+from repro.core import local_sgd as LS
+from repro.models.registry import build_model
+
+def make(pods):
+    mesh = jax.make_mesh((pods, 8 // pods, 1), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh_cfg = MeshConfig(shape=(pods, 8 // pods, 1),
+                          axis_names=("pod", "data", "model"),
+                          replica_axis="pod")
+    cfg = TrainConfig(model=get_smoke("internlm2-1.8b"), mesh=mesh_cfg,
+                      sync=SyncConfig(strategy="hierarchical", period=2),
+                      optimizer=OptimizerConfig(name="sgd", learning_rate=0.05),
+                      data=DataConfig(seq_len=16, global_batch=8))
+    return mesh, cfg
+
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, 512, (2, 8, 16)), jnp.int32),
+         "targets": jnp.asarray(rng.integers(0, 512, (2, 8, 16)), jnp.int32)}
+
+mesh2, cfg2 = make(2)
+model = build_model(cfg2.model)
+with jax.set_mesh(mesh2):
+    state = LS.init_state(model, cfg2, jax.random.key(0), replicas=2)
+    step2 = jax.jit(LS.make_local_sgd_block(model, cfg2, mesh2))
+    state, m = step2(state, batch)
+    l2 = float(m["loss"])
+
+# elastic grow 2 → 4 replicas (average then broadcast)
+host = jax.device_get(state)
+resized = {
+    "params": rescale_replicated_state(host["params"], 2, 4),
+    "opt": rescale_replicated_state(host["opt"], 2, 4),
+    "sync": rescale_replicated_state(host["sync"], 2, 4),
+    "step": host["step"],
+}
+mesh4, cfg4 = make(4)
+with jax.set_mesh(mesh4):
+    step4 = jax.jit(LS.make_local_sgd_block(model, cfg4, mesh4))
+    state4 = jax.tree.map(jnp.asarray, resized)
+    state4, m4 = step4(state4, batch)
+    l4 = float(m4["loss"])
+assert np.isfinite(l4) and l4 < l2 + 0.5, (l2, l4)
+print("OK", l2, l4)
+"""
+        out = run_with_devices(code, n_devices=8)
+        assert "OK" in out

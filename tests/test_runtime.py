@@ -1,0 +1,141 @@
+"""Fault-tolerant step runner: failure/restart replay, stragglers, pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.config import (CheckpointConfig, DataConfig, FaultToleranceConfig,
+                          ModelConfig)
+from repro.data.pipeline import DataPipeline
+from repro.runtime import StepRunner
+from repro.runtime.ft import SimulatedFault
+
+
+def _toy_step():
+    """state = {'w': scalar, 'sum': running sum of batch means}."""
+    def step(state, batch):
+        m = jnp.mean(batch["tokens"].astype(jnp.float32))
+        new = {"w": state["w"] * 0.9 + 0.1 * m, "sum": state["sum"] + m}
+        return new, {"loss": m}
+    return step
+
+
+def _mk_pipeline(cfg_data, model_cfg):
+    def make(start):
+        return DataPipeline(cfg_data, model_cfg, start_step=start)
+    return make
+
+
+@pytest.fixture
+def setup(tmp_path):
+    data_cfg = DataConfig(seq_len=8, global_batch=2, seed=3)
+    model_cfg = ModelConfig(vocab_size=97)
+    ckpt = CheckpointManager(CheckpointConfig(directory=str(tmp_path),
+                                              interval_steps=5))
+    return data_cfg, model_cfg, ckpt
+
+
+class TestStepRunner:
+    def test_failure_replay_is_bitwise_identical(self, setup, tmp_path):
+        data_cfg, model_cfg, _ = setup
+        state0 = {"w": jnp.float32(0), "sum": jnp.float32(0)}
+
+        # run A: no failures
+        ckpt_a = CheckpointManager(CheckpointConfig(
+            directory=str(tmp_path / "a")))
+        r_a = StepRunner(_toy_step(), ckpt_a, FaultToleranceConfig(),
+                         ckpt_interval=5,
+                         make_pipeline=_mk_pipeline(data_cfg, model_cfg))
+        sa, _ = r_a.run(dict(state0), 0, 20)
+
+        # run B: injected failure at step 13 → restore from step-10 ckpt
+        ckpt_b = CheckpointManager(CheckpointConfig(
+            directory=str(tmp_path / "b")))
+        r_b = StepRunner(_toy_step(), ckpt_b,
+                         FaultToleranceConfig(inject_failure_at=13),
+                         ckpt_interval=5,
+                         make_pipeline=_mk_pipeline(data_cfg, model_cfg))
+        sb, _ = r_b.run(dict(state0), 0, 20)
+
+        assert r_b.restarts == 1
+        np.testing.assert_array_equal(np.asarray(sa["w"]), np.asarray(sb["w"]))
+        np.testing.assert_array_equal(np.asarray(sa["sum"]),
+                                      np.asarray(sb["sum"]))
+
+    def test_exhausted_restarts_raise(self, setup, tmp_path):
+        data_cfg, model_cfg, ckpt = setup
+
+        def always_fail(state, batch):
+            raise SimulatedFault("boom")
+
+        r = StepRunner(always_fail, ckpt,
+                       FaultToleranceConfig(max_restarts=2),
+                       ckpt_interval=5,
+                       make_pipeline=_mk_pipeline(data_cfg, model_cfg))
+        with pytest.raises(SimulatedFault):
+            r.run({"w": jnp.float32(0), "sum": jnp.float32(0)}, 0, 10)
+        assert r.restarts == 3
+
+    def test_straggler_detection(self, setup):
+        data_cfg, model_cfg, ckpt = setup
+        r = StepRunner(_toy_step(), ckpt,
+                       FaultToleranceConfig(step_deadline_sec=1e-9),
+                       ckpt_interval=100,
+                       make_pipeline=_mk_pipeline(data_cfg, model_cfg))
+        r.run({"w": jnp.float32(0), "sum": jnp.float32(0)}, 0, 3)
+        assert len(r.watchdog.events) == 3   # every step "straggles"
+
+
+class TestPipeline:
+    def test_deterministic_across_instances(self):
+        cfg = DataConfig(seq_len=16, global_batch=4, seed=5)
+        mc = ModelConfig(vocab_size=128)
+        a = next(DataPipeline(cfg, mc))
+        b = next(DataPipeline(cfg, mc))
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+
+    def test_resume_from_cursor(self):
+        cfg = DataConfig(seq_len=16, global_batch=4, seed=5)
+        mc = ModelConfig(vocab_size=128)
+        p = DataPipeline(cfg, mc)
+        batches = [next(p) for _ in range(5)]
+        st = p.state()
+        q = DataPipeline(cfg, mc, start_step=st["step"])
+        nxt_p, nxt_q = next(p), next(q)
+        np.testing.assert_array_equal(np.asarray(nxt_p["tokens"]),
+                                      np.asarray(nxt_q["tokens"]))
+
+    def test_targets_are_shifted_tokens(self):
+        cfg = DataConfig(seq_len=16, global_batch=2, seed=0)
+        mc = ModelConfig(vocab_size=128)
+        b = next(DataPipeline(cfg, mc))
+        np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                      np.asarray(b["targets"][:, :-1]))
+
+
+class TestEndToEndTrainer:
+    def test_train_cli_smoke(self):
+        """The full launch/train.py driver on 4 host devices with periodic
+        sync, checkpointing, and a mid-run injected fault."""
+        from conftest import run_with_devices
+        code = """
+import sys
+sys.argv = ["train", "--arch", "smollm-360m", "--smoke", "--steps", "8",
+            "--set", "sync.strategy=periodic", "--set", "sync.period=2",
+            "--set", "mesh.replica_axis=data",
+            "--set", "checkpoint.directory=/tmp/repro_test_ckpt",
+            "--set", "checkpoint.interval_steps=2",
+            "--set", "fault.inject_failure_at=5"]
+from repro.launch import train
+train.main()
+"""
+        out = run_with_devices(code, n_devices=4)
+        import json
+        rec = json.loads(out.strip().splitlines()[-1])
+        assert rec["restarts"] == 1
+        assert rec["last_loss"] is not None
+"""NOTE: the trainer smoke uses mesh (4,1) with replica_axis=data — the
+periodic strategy on the data axis (no FSDP), the paper's exact DMS
+topology."""

@@ -1,0 +1,107 @@
+"""Logical-axis sharding rules: divisibility fallback, axis dedup, remap."""
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MeshConfig
+from repro.sharding import DEFAULT_RULES, ShardingRules, rules_for
+
+
+class FakeMesh:
+    """axis_names/devices.shape stand-in (no real devices needed)."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        import numpy as np
+        self.devices = np.zeros(shape)
+
+
+def _rules(shape=(16, 16), names=("data", "model")):
+    cfg = MeshConfig(shape=shape, axis_names=names,
+                     replica_axis="pod" if "pod" in names else "")
+    return rules_for(cfg, FakeMesh(shape, names))
+
+
+def _pad(spec, n):
+    t = tuple(spec)
+    return t + (None,) * (n - len(t))
+
+
+class TestSpecFor:
+    def test_basic_mapping(self):
+        r = _rules()
+        spec = _pad(r.spec_for(("batch", "seq", "embed"),
+                               (256, 4096, 1024)), 3)
+        # batch→data; seq unsharded; embed→data dropped (axis already used)
+        assert spec == ("data", None, None)
+
+    def test_divisibility_fallback(self):
+        r = _rules()
+        # 15 heads do not divide the 16-way model axis → replicate
+        spec = _pad(r.spec_for(("layers", "embed", "heads", "head_dim"),
+                               (32, 960, 15, 64)), 4)
+        assert spec[2] is None
+        # 32 heads divide → sharded
+        spec = _pad(r.spec_for(("layers", "embed", "heads", "head_dim"),
+                               (32, 960, 32, 64)), 4)
+        assert spec[2] == "model"
+
+    def test_axis_used_once(self):
+        r = _rules()
+        # kv_heads grabs model; q_group must not reuse it
+        spec = r.spec_for(("batch", "kv_heads", "q_group"), (16, 32, 16))
+        entries = [e for e in spec if e is not None]
+        flat = []
+        for e in entries:
+            flat.extend(e if isinstance(e, tuple) else (e,))
+        assert len(flat) == len(set(flat))
+
+    def test_gqa_preference_order(self):
+        r = _rules()
+        # kv=4 does not divide 16 → q_group (16) takes the model axis
+        spec = r.spec_for(("batch", "kv_heads", "q_group", "seq"),
+                          (16, 4, 16, 512))
+        assert spec[1] is None and spec[2] == "model"
+
+    def test_tokens_two_axis_sharding(self):
+        r = _rules()
+        spec = r.spec_for(("tokens", None), (1048576, 4096))
+        assert spec[0] == ("data", "model")
+
+    def test_missing_axis_dropped_on_single_pod(self):
+        r = _rules()           # no pod axis in mesh
+        spec = r.spec_for(("replica", "embed"), (2, 1024))
+        assert spec == P(None, "data")
+
+    def test_multi_pod_replica(self):
+        r = _rules((2, 16, 16), ("pod", "data", "model"))
+        spec = r.spec_for(("replica", "embed"), (2, 1024))
+        assert spec == P("pod", "data")
+
+
+@settings(deadline=None, max_examples=100)
+@given(
+    logical=st.lists(st.sampled_from(list(DEFAULT_RULES) + [None]),
+                     min_size=1, max_size=5),
+    dims=st.lists(st.sampled_from([1, 2, 3, 15, 16, 30, 32, 256]),
+                  min_size=5, max_size=5),
+)
+def test_spec_always_valid(logical, dims):
+    """Property: any (logical axes × shape) yields a valid PartitionSpec —
+    every mesh axis used at most once, sharded dims always divisible."""
+    r = _rules()
+    shape = tuple(dims[:len(logical)])
+    spec = r.spec_for(tuple(logical), shape)
+    used = []
+    sizes = {"data": 16, "model": 16}
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        used.extend(axes)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        assert shape[i] % total == 0, (spec, shape)
+    assert len(used) == len(set(used)), spec

@@ -1,0 +1,161 @@
+"""Paper algorithms 1–3: faithfulness, equivalence, convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import svm
+from repro.data import make_svm_dataset
+
+
+def _interleave(x, y, k, sb):
+    """Reorder data so SRDMS(K·sb) sees the same block unions as
+    DMS(K, sb) on contiguous worker shards — the paper's §IV-B setup."""
+    n = (x.shape[0] // (k * sb)) * (k * sb)
+    x, y = x[:n], y[:n]
+    xs = x.reshape(k, n // k, -1)
+    ys = y.reshape(k, n // k)
+    nb = (n // k) // sb
+    xi = np.concatenate([
+        np.stack([xs[w, b * sb:(b + 1) * sb] for w in range(k)]
+                 ).reshape(k * sb, -1) for b in range(nb)])
+    yi = np.concatenate([
+        np.stack([ys[w, b * sb:(b + 1) * sb] for w in range(k)]
+                 ).reshape(k * sb) for b in range(nb)])
+    return x, y, xi, yi
+
+
+class TestPaperEquivalence:
+    """DMS(K, s_b) ≡ SRDMS(K·s_b) — the paper's own validation method."""
+
+    @settings(deadline=None, max_examples=12)
+    @given(k=st.sampled_from([2, 4, 8]), sb=st.sampled_from([1, 2, 4, 8]),
+           seed=st.integers(0, 5))
+    def test_dms_equals_srdms(self, k, sb, seed):
+        rng = np.random.default_rng(seed)
+        n, d = 256, 10
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        y = np.where(rng.random(n) > 0.5, 1.0, -1.0).astype(np.float32)
+        x, y, xi, yi = _interleave(x, y, k, sb)
+        w0 = jnp.zeros(d)
+        wd = svm.dms(w0, x, y, workers=k, epochs=2, block_size=sb)
+        wr = svm.srdms(w0, jnp.asarray(xi), jnp.asarray(yi), epochs=2,
+                       block_size=k * sb)
+        np.testing.assert_allclose(np.asarray(wd), np.asarray(wr),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_block1_equals_pointwise_average(self):
+        """block_size=1 SRDMS reduces to plain SGD (paper: 'block size of
+        unity resembles the standard algorithm')."""
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(64, 8)).astype(np.float32)
+        y = np.where(rng.random(64) > 0.5, 1.0, -1.0).astype(np.float32)
+        w0 = jnp.zeros(8)
+        w_seq = svm.seq_sgd(w0, jnp.asarray(x), jnp.asarray(y), epochs=1)
+        w_blk = svm.srdms(w0, jnp.asarray(x), jnp.asarray(y), epochs=1,
+                          block_size=1)
+        np.testing.assert_allclose(np.asarray(w_seq), np.asarray(w_blk),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestHingeMath:
+    @settings(deadline=None, max_examples=20)
+    @given(seed=st.integers(0, 100))
+    def test_block_grad_is_objective_subgradient(self, seed):
+        """At differentiable points the block gradient matches autodiff of
+        the (mean-normalized) objective."""
+        rng = np.random.default_rng(seed)
+        n, d, c = 32, 6, 1.0
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        y = jnp.asarray(np.where(rng.random(n) > 0.5, 1.0, -1.0), jnp.float32)
+        w = jnp.asarray(rng.normal(size=d), jnp.float32)
+        margins = 1.0 - y * (x @ w)
+        if bool(jnp.any(jnp.abs(margins) < 1e-3)):
+            return  # too close to the hinge kink
+        obj = lambda w: 0.5 * jnp.dot(w, w) + c * jnp.mean(
+            jnp.maximum(0.0, 1.0 - y * (x @ w)))
+        auto = jax.grad(obj)(w)
+        manual = svm.block_grad(w, x, y, c)
+        np.testing.assert_allclose(np.asarray(manual), np.asarray(auto),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_objective_decreases(self, ijcnn_small):
+        ds = ijcnn_small
+        w0 = jnp.zeros(ds.features)
+        x, y = jnp.asarray(ds.x_train), jnp.asarray(ds.y_train)
+        j0 = svm.hinge_objective(w0, x, y)
+        w = svm.srdms(w0, x, y, epochs=10, block_size=64)
+        j1 = svm.hinge_objective(w, x, y)
+        assert float(j1) < float(j0)
+
+
+class TestConvergence:
+    """Paper §V-A: accuracy is insensitive to block size (MSF)."""
+
+    def test_accuracy_flat_across_block_sizes(self, ijcnn_small):
+        ds = ijcnn_small
+        x, y = jnp.asarray(ds.x_train), jnp.asarray(ds.y_train)
+        xcv, ycv = jnp.asarray(ds.x_cv), jnp.asarray(ds.y_cv)
+        w0 = jnp.zeros(ds.features)
+        accs = {}
+        for bs in [8, 64, 512]:
+            w = svm.srdms(w0, x, y, epochs=20, block_size=bs)
+            accs[bs] = float(svm.accuracy(w, xcv, ycv))
+        assert min(accs.values()) > 0.75, accs
+        # paper: ±1% across MSFs after convergence; allow 5% on the
+        # smaller synthetic stand-in
+        assert max(accs.values()) - min(accs.values()) < 0.05, accs
+
+    def test_block1_converges_given_more_epochs(self, ijcnn_small):
+        """block=1 (highest MSF) is noisy early — α=1/(1+t) starts at 1 —
+        and needs more epochs on the small stand-in; the paper notes the
+        same initialization sensitivity on Ijcnn1 (§V-A)."""
+        ds = ijcnn_small
+        w = svm.srdms(jnp.zeros(ds.features), jnp.asarray(ds.x_train),
+                      jnp.asarray(ds.y_train), epochs=80, block_size=1)
+        acc = float(svm.accuracy(w, jnp.asarray(ds.x_cv),
+                                 jnp.asarray(ds.y_cv)))
+        assert acc > 0.75, acc
+
+    def test_dms_vmap_converges(self, ijcnn_small):
+        ds = ijcnn_small
+        w0 = jnp.zeros(ds.features)
+        w = svm.dms(w0, ds.x_train, ds.y_train, workers=8, epochs=20,
+                    block_size=16)
+        acc = float(svm.accuracy(w, jnp.asarray(ds.x_cv),
+                                 jnp.asarray(ds.y_cv)))
+        assert acc > 0.75, acc
+
+    def test_pallas_grad_impl_matches(self, ijcnn_small):
+        ds = ijcnn_small
+        x, y = jnp.asarray(ds.x_train[:512]), jnp.asarray(ds.y_train[:512])
+        w0 = jnp.zeros(ds.features)
+        w_jnp = svm.srdms(w0, x, y, epochs=2, block_size=64,
+                          grad_impl="jnp")
+        w_pal = svm.srdms(w0, x, y, epochs=2, block_size=64,
+                          grad_impl="pallas")
+        np.testing.assert_allclose(np.asarray(w_jnp), np.asarray(w_pal),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestDistributedBackend:
+    def test_shard_map_backend_matches_vmap(self, run=None):
+        from conftest import run_with_devices
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import svm
+from repro.launch.mesh import make_test_mesh
+rng = np.random.default_rng(0)
+x = rng.normal(size=(256, 12)).astype(np.float32)
+y = np.where(rng.random(256) > 0.5, 1.0, -1.0).astype(np.float32)
+w0 = jnp.zeros(12)
+mesh = make_test_mesh((8,), ("data",))
+wv = svm.dms(w0, x, y, workers=8, epochs=3, block_size=4, backend="vmap")
+with jax.set_mesh(mesh):
+    ws = svm.dms(w0, x, y, workers=8, epochs=3, block_size=4,
+                 backend="shard_map", mesh=mesh)
+np.testing.assert_allclose(np.asarray(wv), np.asarray(ws), rtol=1e-5, atol=1e-6)
+print("OK")
+"""
+        assert "OK" in run_with_devices(code)
