@@ -1,0 +1,227 @@
+"""Compatibility shims: run the new-style JAX API on older jaxlib.
+
+The codebase is written against the post-0.6 JAX surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``, ``jax.make_mesh(axis_types=)``,
+``jax.jit(in_shardings=PartitionSpec)``). On older installs (0.4.x) those
+names are missing but the underlying machinery exists under
+``jax.experimental.shard_map`` (with the ``auto`` parameter playing the role
+of the complement of ``axis_names``) and the legacy mesh context manager.
+This module backfills the new names once, at ``repro`` import time; on a
+new-enough JAX it is a no-op.
+
+Legacy-only behavior changes (documented, performance-neutral on tests):
+
+* ``with_sharding_constraint`` becomes a no-op *inside* a shard_map body:
+  0.4.x XLA's partitioner CHECK-fails (``IsManualSubgroup``) on auto-axis
+  constraints in partial-manual regions. Constraints are layout hints, not
+  semantics, so dropping them is safe (single-host test meshes don't need
+  them).
+* ``jax.jit`` with ``PartitionSpec`` leaves in in_/out_shardings resolves
+  them against the ambient mesh lazily at first call/lower, mirroring the
+  new API's context-mesh resolution.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+LEGACY = not hasattr(jax, "set_mesh")
+
+_IN_SHARD_MAP = contextvars.ContextVar("repro_in_shard_map", default=False)
+
+
+def _ambient_mesh():
+    """The legacy thread-resources mesh set by ``with mesh:`` (None if unset)."""
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+if not hasattr(jax.sharding, "AxisType"):
+    class _AxisType:
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = _AxisType  # type: ignore[attr-defined]
+
+
+if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+    _make_mesh = jax.make_mesh
+
+    def _make_mesh_compat(axis_shapes, axis_names, *, devices=None,
+                          axis_types=None):
+        del axis_types  # pre-AxisType meshes are implicitly Auto
+        return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = _make_mesh_compat  # type: ignore[assignment]
+
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map
+    from jax.sharding import PartitionSpec as _PSpec
+
+    def _spec_entries(spec):
+        """P(...) → list of (dim, (axis, ...)) for the named entries."""
+        out = []
+        for dim, entry in enumerate(tuple(spec)):
+            if entry is None:
+                continue
+            out.append((dim, entry if isinstance(entry, tuple) else (entry,)))
+        return out
+
+    def _inline_shard_map(f, in_specs, out_specs):
+        """Emulate a shard_map nested inside an outer manual region.
+
+        Legacy shard_map cannot nest under an already-manual trace, but the
+        nested region's collectives are legal in the outer one (its axes are
+        manual there). So: slice each operand to this device's shard by
+        ``axis_index``, run the body inline, and all-gather named output
+        dims back to the outer region's (replicated) layout.
+        """
+        def to_local(x, spec):
+            if spec is None or not isinstance(spec, _PSpec):
+                return x
+            for dim, axes in _spec_entries(spec):
+                idx = None
+                size = 1
+                for a in axes:
+                    ai = jax.lax.axis_index(a)
+                    n = jax.lax.psum(1, a)
+                    idx = ai if idx is None else idx * n + ai
+                    size = size * n
+                shard = x.shape[dim] // size
+                x = jax.lax.dynamic_slice_in_dim(x, idx * shard, shard,
+                                                 axis=dim)
+            return x
+
+        def to_global(y, spec):
+            if spec is None or not isinstance(spec, _PSpec):
+                return y
+            for dim, axes in reversed(_spec_entries(spec)):
+                for a in reversed(axes):
+                    y = jax.lax.all_gather(y, a, axis=dim, tiled=True)
+            return y
+
+        def call(*args):
+            # PartitionSpec is a pytree leaf, so mapping (args, specs)
+            # pairs arrays with their specs at matching tree positions
+            locs = jax.tree.map(to_local, tuple(args), tuple(in_specs))
+            outs = f(*locs)
+            return jax.tree.map(to_global, outs, out_specs)
+        return call
+
+    def _shard_map_compat(f, mesh=None, *, in_specs, out_specs,
+                          axis_names=None, check_vma=True):
+        if _IN_SHARD_MAP.get():
+            # nested under an outer manual region — emulate inline
+            return _inline_shard_map(f, in_specs, out_specs)
+        if mesh is None:
+            mesh = _ambient_mesh()
+            if mesh is None:
+                raise ValueError(
+                    "shard_map without mesh requires an ambient mesh "
+                    "(jax.set_mesh) on legacy JAX")
+        # partial-manual (auto axes) CHECK-crashes 0.4.x XLA
+        # (IsManualSubgroup); run full-manual instead — unnamed dims are
+        # simply replicated across the extra manual axes, which is
+        # semantics-preserving because the body never references them.
+        del axis_names
+
+        @functools.wraps(f)
+        def traced(*args, **kwargs):
+            token = _IN_SHARD_MAP.set(True)
+            try:
+                return f(*args, **kwargs)
+            finally:
+                _IN_SHARD_MAP.reset(token)
+
+        return _shard_map(traced, mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+    jax.shard_map = _shard_map_compat  # type: ignore[attr-defined]
+
+
+if not hasattr(jax, "set_mesh"):
+    @contextlib.contextmanager
+    def _set_mesh(mesh):
+        # the legacy Mesh context manager supplies the resource env that
+        # with_sharding_constraint(PartitionSpec) and pjit resolve against
+        with mesh:
+            yield mesh
+
+    jax.set_mesh = _set_mesh  # type: ignore[attr-defined]
+
+
+if LEGACY:
+    # --- with_sharding_constraint: drop inside shard_map bodies ----------
+    _orig_wsc = jax.lax.with_sharding_constraint
+
+    def _wsc_compat(x, shardings):
+        if _IN_SHARD_MAP.get():
+            return x
+        return _orig_wsc(x, shardings)
+
+    jax.lax.with_sharding_constraint = _wsc_compat  # type: ignore[assignment]
+
+    # --- jit: resolve PartitionSpec shardings against the ambient mesh ---
+    from jax.sharding import NamedSharding, PartitionSpec as _P
+
+    _orig_jit = jax.jit
+
+    def _has_spec(tree) -> bool:
+        return any(isinstance(l, _P) for l in jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, _P)))
+
+    def _resolve_specs(tree, mesh):
+        return jax.tree.map(
+            lambda l: NamedSharding(mesh, l) if isinstance(l, _P) else l,
+            tree, is_leaf=lambda x: isinstance(x, _P))
+
+    class _LazySpecJit:
+        """jit whose PartitionSpec shardings bind to the mesh in scope at
+        first call/lower (new-JAX context-mesh semantics)."""
+
+        def __init__(self, fun, kwargs):
+            self._fun = fun
+            self._kwargs = kwargs
+            self._cache = {}
+
+        def _resolved(self):
+            mesh = _ambient_mesh()
+            if mesh is None:
+                raise ValueError(
+                    "jit with PartitionSpec shardings requires an ambient "
+                    "mesh (jax.set_mesh) on legacy JAX")
+            key = id(mesh)
+            if key not in self._cache:
+                kw = dict(self._kwargs)
+                for name in ("in_shardings", "out_shardings"):
+                    if name in kw:
+                        kw[name] = _resolve_specs(kw[name], mesh)
+                self._cache[key] = _orig_jit(self._fun, **kw)
+            return self._cache[key]
+
+        def __call__(self, *args, **kwargs):
+            return self._resolved()(*args, **kwargs)
+
+        def lower(self, *args, **kwargs):
+            return self._resolved().lower(*args, **kwargs)
+
+        def __getattr__(self, name):
+            return getattr(self._resolved(), name)
+
+    @functools.wraps(_orig_jit)
+    def _jit_compat(fun=None, **kwargs):
+        if fun is None:
+            return lambda f: _jit_compat(f, **kwargs)
+        if _has_spec((kwargs.get("in_shardings"), kwargs.get("out_shardings"))):
+            return _LazySpecJit(fun, kwargs)
+        return _orig_jit(fun, **kwargs)
+
+    jax.jit = _jit_compat  # type: ignore[assignment]

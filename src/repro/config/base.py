@@ -126,6 +126,17 @@ class SyncConfig:
                                 (paper's DMS / local SGD). ``period=H``.
       * ``"hierarchical"``    — every-step sync on the data axis, periodic
                                 sync on the replica (pod) axis.
+
+    ``overlap`` — how the residual sync cost is taken off the critical path:
+      * ``"none"``    — blocking collective at the block boundary (paper).
+      * ``"delayed"`` — stale-by-one averaging: block *i*'s averaged delta is
+                        applied at the end of block *i+1*, so the collective
+                        overlaps block *i+1*'s compute (Stich 2018 local-SGD
+                        staleness regime).
+      * ``"chunked"`` — round-robin the parameter tree into ``chunks`` shards
+                        and sync one shard per block: each leaf syncs every
+                        ``chunks·period`` steps and per-sync wire bytes shrink
+                        ``chunks``×.
     """
 
     strategy: str = "sync_every_step"
@@ -135,10 +146,13 @@ class SyncConfig:
     slowmo: float = 0.0            # outer momentum on sync delta (0 => off)
     slowmo_lr: float = 1.0
     eval_at_sync: bool = False     # paper's per-sync CV-accuracy computation
+    overlap: str = "none"          # none | delayed | chunked
+    chunks: int = 4                # R — shard count for overlap="chunked"
 
     @property
     def msf_label(self) -> str:
-        return f"{self.strategy}(H={self.period},comp={self.compression})"
+        tail = "" if self.overlap == "none" else f",overlap={self.overlap}"
+        return f"{self.strategy}(H={self.period},comp={self.compression}{tail})"
 
 
 @dataclass(frozen=True)

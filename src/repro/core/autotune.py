@@ -8,13 +8,21 @@ fabric) without a sweep:
 
 **Cost model.** Per optimizer step,
 
-    T(H) ≈ T_step + T_sync / H
-    T_sync = wire_bytes(P, K, compression) / BW_link
+    T(H) ≈ T_step + T_sync / H                    (blocking sync)
+    T(H) ≈ max(T_step · H, T_sync) / H            (overlap="delayed")
+    T_sync = wire_bytes(P, K, compression, overlap) / BW_link
 
 with ``T_step`` the compute+memory-bound step time (from the roofline
 terms or measured) and ``T_sync`` the parameter-sync collective on the
-sync axis (DCN for the hierarchical strategy). Communication efficiency
-alone is monotone in H — the paper's Figs 13–15 plateau.
+sync axis (DCN for the hierarchical strategy). Under delayed overlap the
+collective runs concurrently with the next block's compute and is exposed
+only when it outlasts the block, so ``choose_period`` picks a *smaller* H
+(more frequent sync at the same wall clock — tighter averaging for free).
+``overlap="chunked"`` keeps the blocking formula but ``T_sync`` shrinks by
+the shard count. Wire bytes come from :mod:`repro.core.costmodel`, the
+same accounting the sync engine's ``collective_bytes_per_sync`` reports —
+one formula, two consumers. Communication efficiency alone is monotone in
+H — the paper's Figs 13–15 plateau.
 
 **Statistical guardrail.** Local SGD analysis (Stich 2018; Wang & Joshi
 2018) bounds the extra optimization error of H-step averaging by a term
@@ -37,6 +45,7 @@ import math
 from typing import Optional
 
 from repro.config.base import SyncConfig
+from repro.core import costmodel
 
 DCN_BW = 6.25e9       # bytes/s per chip, cross-pod
 ICI_BW = 50e9         # bytes/s per chip, intra-pod
@@ -54,15 +63,14 @@ class TuneInputs:
 
 
 def sync_time_s(inp: TuneInputs, cfg: SyncConfig) -> float:
-    """One parameter sync on the sync axis (ring model, per chip)."""
-    p = inp.param_bytes_per_chip
-    k = max(2, inp.replicas)
-    if cfg.compression == "int8":
-        wire = p / 4 * (k - 1)
-    elif cfg.compression == "int16":
-        wire = p / 2 * 2 * (k - 1) / k
-    else:
-        wire = 2 * p * (k - 1) / k
+    """One executed parameter sync on the sync axis (ring model, per chip).
+
+    Wire bytes come from the shared cost module — identical to what the
+    sync engine's ``collective_bytes_per_sync`` accounts, including the
+    compression and chunked-overlap factors.
+    """
+    wire = costmodel.wire_bytes_per_sync(
+        inp.param_bytes_per_chip, max(2, inp.replicas), cfg)
     return wire / inp.link_bw
 
 
@@ -76,20 +84,41 @@ def drift_cap(inp: TuneInputs, max_drift: float) -> int:
 
 def choose_period(inp: TuneInputs, cfg: Optional[SyncConfig] = None, *,
                   target_overhead: float = 0.05,
-                  max_drift: float = 0.01) -> int:
-    """Smallest H with sync overhead ≤ ``target_overhead``·step time,
-    clipped by the statistical drift cap."""
+                  max_drift: float = 0.01,
+                  overlap: Optional[str] = None) -> int:
+    """Smallest H with *exposed* sync overhead ≤ ``target_overhead``·step
+    time, clipped by the statistical drift cap.
+
+    ``overlap`` (or ``cfg.overlap``) changes the overhead condition:
+    blocking needs ``T_sync/H ≤ target·T_step``; delayed only needs the
+    collective to fit under the next block plus the overhead allowance,
+    ``T_sync/H ≤ (1+target)·T_step`` — so delayed H is always ≤ the
+    blocking H for the same inputs (more frequent averaging, same wall
+    clock).
+    """
     cfg = cfg or SyncConfig(strategy="hierarchical")
+    if overlap is not None:
+        cfg = dataclasses.replace(cfg, overlap=overlap)
     t_sync = sync_time_s(inp, cfg)
     if t_sync <= 0 or inp.step_time_s <= 0:
         return 1
-    h_comm = math.ceil(t_sync / (target_overhead * inp.step_time_s))
-    h = max(1, min(h_comm, drift_cap(inp, max_drift)))
+    if cfg.overlap == "delayed":
+        denom = (1.0 + target_overhead) * inp.step_time_s
+    else:
+        denom = target_overhead * inp.step_time_s
+    h_comm = math.ceil(t_sync / denom)
+    cap = drift_cap(inp, max_drift)
+    if cfg.overlap == "chunked":
+        # each leaf only averages every chunks·H steps, so the *effective*
+        # averaging period is chunks×H — the drift cap binds H accordingly
+        cap = max(1, cap // max(1, cfg.chunks))
+    h = max(1, min(h_comm, cap))
     return h
 
 
 def predicted_step_time(inp: TuneInputs, cfg: SyncConfig, h: int) -> float:
-    return inp.step_time_s + sync_time_s(inp, cfg) / max(1, h)
+    return costmodel.overlapped_step_time(
+        inp.step_time_s, sync_time_s(inp, cfg), h, cfg)
 
 
 def report(inp: TuneInputs, cfg: Optional[SyncConfig] = None) -> dict:
@@ -104,8 +133,10 @@ def report(inp: TuneInputs, cfg: Optional[SyncConfig] = None) -> dict:
         "ladder": {
             h: {
                 "step_s": predicted_step_time(inp, cfg, h),
-                "overhead": sync_time_s(inp, cfg) / max(1, h)
-                / inp.step_time_s,
+                # exposed sync fraction — consistent with step_s under
+                # overlap (blocking reduces to sync/H/step as before)
+                "overhead": (predicted_step_time(inp, cfg, h)
+                             - inp.step_time_s) / inp.step_time_s,
             } for h in ladder
         },
     }

@@ -1,0 +1,57 @@
+"""Single source of truth for sync-collective cost accounting.
+
+Both :func:`repro.core.sync.collective_bytes_per_sync` (napkin math and
+benchmark labels) and :func:`repro.core.autotune.sync_time_s` (the MSF
+auto-tuner) derive from :func:`wire_bytes_per_sync`; before this module the
+two sites duplicated the formulas and could drift.
+
+Accounting conventions (per chip, ``param_bytes`` is the fp32 footprint of
+the synced tree on this chip):
+
+* fp32 ring all-reduce moves ``2·P·(K−1)/K`` bytes.
+* int8 exchange is an all-gather (summing int8 on the wire would overflow):
+  ``P/4·(K−1)`` bytes.
+* int16 fixed-point all-reduce: ``P/2`` payload through the ring,
+  ``2·(P/2)·(K−1)/K = P·(K−1)/K`` bytes.
+
+Overlap modes (``SyncConfig.overlap``):
+
+* ``delayed`` moves the same bytes — it hides them behind the next block's
+  compute instead of shrinking them, so the *bytes* are unchanged and only
+  the *time* model (:func:`overlapped_step_time`) differs.
+* ``chunked`` syncs one of ``cfg.chunks`` round-robin shards per sync point,
+  dividing per-sync wire bytes by the shard count.
+"""
+from __future__ import annotations
+
+from repro.config.base import SyncConfig
+
+
+def wire_bytes_per_sync(param_bytes: int, world: int, cfg: SyncConfig) -> float:
+    """Wire bytes of ONE executed sync collective (per chip)."""
+    if cfg.compression == "int8":
+        wire = param_bytes / 4 * (world - 1)
+    elif cfg.compression == "int16":
+        wire = param_bytes * (world - 1) / world
+    else:
+        wire = 2 * param_bytes * (world - 1) / world
+    if cfg.overlap == "chunked":
+        wire /= max(1, cfg.chunks)
+    return wire
+
+
+def overlapped_step_time(step_time_s: float, sync_time_s: float, h: int,
+                         cfg: SyncConfig) -> float:
+    """Per-optimizer-step wall clock under the configured overlap mode.
+
+    * blocking (``none``/``chunked``): ``T_step + T_sync/H`` — the collective
+      sits on the critical path at every block boundary (chunked has already
+      shrunk ``T_sync`` by the shard count via the wire-bytes model).
+    * ``delayed``: ``max(T_step·H, T_sync)/H`` — the collective runs
+      concurrently with the next block's H steps of compute and is exposed
+      only when it outlasts them.
+    """
+    h = max(1, h)
+    if cfg.overlap == "delayed":
+        return max(step_time_s * h, sync_time_s) / h
+    return step_time_s + sync_time_s / h

@@ -19,6 +19,15 @@ Two compiled step flavors, selected by ``SyncConfig.strategy``:
   therefore the full collective schedule — ICI collectives every microbatch,
   one DCN sync per block — which is exactly what the roofline reads.
 
+  ``SyncConfig.overlap`` flows through ``sync_point`` unchanged here:
+  ``"delayed"`` makes the block's DCN collective feed only the carried
+  ``sync`` state (the stale correction applied next block), so XLA can
+  schedule it under the next block's compute; ``"chunked"`` syncs one
+  round-robin parameter shard per block. Note that under either mode the
+  replicas are *not* byte-identical right after a block — they converge to
+  anchor + own last block's drift (delayed) or per-leaf staleness ≤
+  ``chunks`` blocks (chunked); see :mod:`repro.core.sync`.
+
 State layout (plain dict → trivially checkpointable):
 
     {"params": …, "opt": …, "sync": …, "step": i32[]}
@@ -185,9 +194,24 @@ def make_local_sgd_block(model, cfg: TrainConfig, mesh: Mesh,
             metrics = {"loss": jax.lax.pmean(jnp.mean(losses), replica_axis)}
             if cfg.sync.eval_at_sync:
                 # the paper's per-sync convergence check (§V-C2): an extra
-                # forward pass on the last microbatch with the synced params
+                # forward pass on the last microbatch with the *synced*
+                # params. Under overlap the block-end params are still
+                # per-replica divergent, so reconstruct the synchronized
+                # model first: delayed has it as params+pending (identical
+                # on every replica); chunked needs a replica mean.
+                eval_params = params
+                if cfg.sync.overlap == "delayed":
+                    eval_params = jax.tree.map(
+                        lambda p, q: (p.astype(jnp.float32) + q
+                                      ).astype(p.dtype),
+                        params, sync_state["pending"])
+                elif cfg.sync.overlap == "chunked":
+                    eval_params = jax.tree.map(
+                        lambda p: jax.lax.pmean(
+                            p.astype(jnp.float32), replica_axis
+                        ).astype(p.dtype), params)
                 last_mb = jax.tree.map(lambda x: x[-1], batch)
-                eval_loss, _ = model.loss(params, last_mb)
+                eval_loss, _ = model.loss(eval_params, last_mb)
                 metrics["sync_eval_loss"] = jax.lax.pmean(
                     eval_loss, replica_axis)
 
@@ -209,6 +233,28 @@ def make_local_sgd_block(model, cfg: TrainConfig, mesh: Mesh,
                  "step": step}, metrics)
 
     return step_fn
+
+
+def finalize_state(state, cfg: TrainConfig):
+    """Make the trained state globally consistent before checkpoint/eval.
+
+    Under ``overlap="delayed"``/``"chunked"`` the replicas are intentionally
+    divergent between blocks (the last mean correction lives only in the
+    sync state); this collapses params to the fully synchronized model
+    (``sync.flush_overlap``) and clears the pending correction so training
+    can also resume cleanly from the flushed state. A no-op for
+    ``overlap="none"``.
+    """
+    if cfg.sync.overlap == "none":
+        return state
+    new_sync = dict(state["sync"])
+    if "pending" in new_sync:
+        new_sync["pending"] = jax.tree.map(jnp.zeros_like,
+                                           new_sync["pending"])
+    return {**state,
+            "params": S.flush_overlap(state["params"], state["sync"],
+                                      cfg.sync),
+            "sync": new_sync}
 
 
 def make_train_step(model, cfg: TrainConfig, mesh: Mesh,

@@ -26,6 +26,20 @@ Three execution backends share the block math:
 
 ``grad_impl="pallas"`` routes the block-gradient hot spot through the fused
 Pallas kernel (:mod:`repro.kernels.hinge`).
+
+``overlap`` lifts the sync engine's overlap modes (see
+:mod:`repro.core.sync`) onto the paper-faithful path:
+
+* ``"none"``    — blocking ``MPI_AllReduce`` at every block boundary (the
+  paper; keeps the DMS ≡ SRDMS identity bit-exact).
+* ``"delayed"`` — stale-by-one averaging: block *i*'s mean delta is applied
+  at the end of block *i+1*, so the collective overlaps the next block's
+  compute. Workers carry ``pending = meanΔ − ownΔ`` and stay within one
+  block's drift of the anchor.
+* ``"chunked"`` — ``w`` is split into ``chunks`` contiguous segments
+  (zero-padded to equal length) and one segment is value-averaged per
+  block, shrinking per-sync wire bytes ``chunks``× (each coordinate syncs
+  every ``chunks`` blocks).
 """
 from __future__ import annotations
 
@@ -52,6 +66,13 @@ def hinge_objective(w: jax.Array, x: jax.Array, y: jax.Array,
 def accuracy(w: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
     pred = jnp.where(x @ w >= 0, 1.0, -1.0)
     return jnp.mean(pred == y)
+
+
+def _padded_width(d: int, chunks: int) -> int:
+    """Feature count padded up to a chunk multiple — the single source of
+    the chunked carry width (``_dms_vmap`` / ``_carry_init`` /
+    ``dms_stepper_init`` must agree or carries go shape-incompatible)."""
+    return -(-d // chunks) * chunks
 
 
 def block_grad(w: jax.Array, xb: jax.Array, yb: jax.Array, c: float,
@@ -153,11 +174,13 @@ def _shard_data(x: np.ndarray, y: np.ndarray, k: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("epochs", "block_size", "c", "grad_impl"))
+                   static_argnames=("epochs", "block_size", "c", "grad_impl",
+                                    "overlap", "chunks"))
 def _dms_vmap(w0, xs, ys, *, epochs: int, block_size: int, c: float,
-              grad_impl: str):
+              grad_impl: str, overlap: str = "none", chunks: int = 4):
     """K simulated workers: xs (K, n_local, d). Every worker holds its own
-    w between syncs; sync = mean over the worker dim after each block."""
+    w between syncs; sync = mean over the worker dim after each block
+    (blocking), stale-by-one (delayed) or one w-segment per block (chunked)."""
     k, n_local, d = xs.shape
     nb = n_local // block_size
     xb = xs[:, : nb * block_size].reshape(k, nb, block_size, d)
@@ -166,46 +189,167 @@ def _dms_vmap(w0, xs, ys, *, epochs: int, block_size: int, c: float,
     xb = jnp.swapaxes(xb, 0, 1)   # (nb, K, bs, d)
     yb = jnp.swapaxes(yb, 0, 1)
 
-    def epoch(w, t):
-        alpha = 1.0 / (1.0 + t.astype(w.dtype))
-        def block(w, xy):
-            xblk, yblk = xy            # (K, bs, d), (K, bs)
-            grads = jax.vmap(lambda xw, yw: block_grad(w, xw, yw, c, grad_impl)
-                             )(xblk, yblk)
-            w_locals = w - alpha * grads          # (K, d) per-worker models
-            return jnp.mean(w_locals, axis=0), None   # MPI_AllReduce / K
-        w, _ = jax.lax.scan(block, w, (xb, yb))
-        return w, None
+    if overlap == "none":
+        def epoch(w, t):
+            alpha = 1.0 / (1.0 + t.astype(w.dtype))
+            def block(w, xy):
+                xblk, yblk = xy        # (K, bs, d), (K, bs)
+                grads = jax.vmap(
+                    lambda xw, yw: block_grad(w, xw, yw, c, grad_impl)
+                )(xblk, yblk)
+                w_locals = w - alpha * grads      # (K, d) per-worker models
+                return jnp.mean(w_locals, axis=0), None  # MPI_AllReduce / K
+            w, _ = jax.lax.scan(block, w, (xb, yb))
+            return w, None
 
-    w, _ = jax.lax.scan(epoch, w0, jnp.arange(epochs))
-    return w
+        w, _ = jax.lax.scan(epoch, w0, jnp.arange(epochs))
+        return w
+
+    if overlap == "delayed":
+        # carry: per-worker models + pending correction (meanΔ − ownΔ of the
+        # previous block). This block's output never consumes this block's
+        # mean — the collective has the whole next block to land.
+        def epoch(carry, t):
+            wk, pending = carry
+            alpha = 1.0 / (1.0 + t.astype(wk.dtype))
+            def block(carry, xy):
+                wk, pending = carry
+                xblk, yblk = xy
+                grads = jax.vmap(
+                    lambda ww, xw, yw: block_grad(ww, xw, yw, c, grad_impl)
+                )(wk, xblk, yblk)
+                delta = -alpha * grads            # (K, d) local block deltas
+                mean = jnp.mean(delta, axis=0)    # the (overlappable) sync
+                return (wk + delta + pending, mean[None] - delta), None
+            carry, _ = jax.lax.scan(block, (wk, pending), (xb, yb))
+            return carry, None
+
+        carry0 = (jnp.broadcast_to(w0, (k, d)), jnp.zeros((k, d), w0.dtype))
+        (wk, _), _ = jax.lax.scan(epoch, carry0, jnp.arange(epochs))
+        # flush: workers sit at anchor + ownΔ_last; their mean is the fully
+        # synchronized model anchor + meanΔ_last
+        return jnp.mean(wk, axis=0)
+
+    if overlap == "chunked":
+        dp = _padded_width(d, chunks)
+        seg = dp // chunks
+        def epoch(carry, t):
+            alpha = 1.0 / (1.0 + t.astype(w0.dtype))
+            def block(carry, xy):
+                wk, cnt = carry                   # (K, dp), i32
+                xblk, yblk = xy
+                grads = jax.vmap(
+                    lambda ww, xw, yw: block_grad(ww[:d], xw, yw, c, grad_impl)
+                )(wk, xblk, yblk)
+                w_end = wk - alpha * jnp.pad(grads, ((0, 0), (0, dp - d)))
+                idx = cnt % chunks
+                rows = jax.lax.dynamic_slice(w_end, (0, idx * seg), (k, seg))
+                mrow = jnp.broadcast_to(jnp.mean(rows, axis=0), (k, seg))
+                w_new = jax.lax.dynamic_update_slice(w_end, mrow,
+                                                     (0, idx * seg))
+                return (w_new, cnt + 1), None
+            carry, _ = jax.lax.scan(block, carry, (xb, yb))
+            return carry, None
+
+        wk0 = jnp.zeros((k, dp), w0.dtype).at[:, :d].set(
+            jnp.broadcast_to(w0, (k, d)))
+        carry0 = (wk0, jnp.zeros((), jnp.int32))
+        (wk, _), _ = jax.lax.scan(epoch, carry0, jnp.arange(epochs))
+        return jnp.mean(wk, axis=0)[:d]
+
+    raise ValueError(f"unknown overlap mode: {overlap!r}")
+
+
+def _make_worker_block(axis: str, *, c: float, grad_impl: str, overlap: str,
+                       chunks: int, d: int):
+    """One worker's block (compute + boundary sync), inside shard_map with
+    ``axis`` manual. ``carry`` is a dict per overlap mode:
+
+        none:    {"w": (d,)}                    — replicated after each sync
+        delayed: {"w": (d,), "pending": (d,)}   — pending = meanΔ − ownΔ
+        chunked: {"w": (dp,), "cnt": i32}       — dp = d padded to chunks·seg
+
+    Under ``delayed`` the returned ``w`` depends only on the *previous*
+    boundary's mean (the pending correction); this boundary's ``pmean``
+    output feeds only ``pending``, so the collective is not on this or the
+    next block's compute critical path.
+    """
+    def block(carry, xblk, yblk, alpha):
+        if overlap == "none":
+            w = carry["w"]
+            w_local = w - alpha * block_grad(w, xblk, yblk, c, grad_impl)
+            return {"w": jax.lax.pmean(w_local, axis)}
+        if overlap == "delayed":
+            w = carry["w"]
+            delta = -alpha * block_grad(w, xblk, yblk, c, grad_impl)
+            mean = jax.lax.pmean(delta, axis)        # overlappable collective
+            return {"w": w + delta + carry["pending"],
+                    "pending": mean - delta}
+        # chunked: one w-segment value-averaged per block
+        w = carry["w"]                               # (dp,)
+        dp = w.shape[0]
+        seg = dp // chunks
+        g = block_grad(w[:d], xblk, yblk, c, grad_impl)
+        w_end = w - alpha * jnp.pad(g, (0, dp - d))
+        idx = carry["cnt"] % chunks
+        row = jax.lax.dynamic_slice(w_end, (idx * seg,), (seg,))
+        row = jax.lax.pmean(row, axis)               # 1/chunks of the bytes
+        w_new = jax.lax.dynamic_update_slice(w_end, row, (idx * seg,))
+        return {"w": w_new, "cnt": carry["cnt"] + 1}
+    return block
+
+
+def _carry_init(w0, *, overlap: str, chunks: int):
+    """Initial per-worker carry (local, no leading worker dim)."""
+    d = w0.shape[0]
+    if overlap == "none":
+        return {"w": w0}
+    if overlap == "delayed":
+        return {"w": w0, "pending": jnp.zeros((d,), w0.dtype)}
+    dp = _padded_width(d, chunks)
+    return {"w": jnp.zeros((dp,), w0.dtype).at[:d].set(w0),
+            "cnt": jnp.zeros((), jnp.int32)}
+
+
+def _carry_flush(carry, axis: str, *, overlap: str, d: int):
+    """Collapse a worker's carry to the fully synchronized model."""
+    if overlap == "none":
+        return carry["w"]
+    if overlap == "delayed":
+        # workers sit at anchor + ownΔ_last; their mean = anchor + meanΔ_last
+        return jax.lax.pmean(carry["w"], axis)
+    return jax.lax.pmean(carry["w"], axis)[:d]
 
 
 def _dms_shard_map(w0, xs, ys, *, epochs: int, block_size: int, c: float,
-                   grad_impl: str, mesh, axis: str = "data"):
+                   grad_impl: str, mesh, axis: str = "data",
+                   overlap: str = "none", chunks: int = 4):
     """Real collectives: workers = mesh axis shards; sync = lax.pmean."""
     k = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     assert xs.shape[0] == k, (xs.shape, k)
+    d = w0.shape[0]
 
     def worker(w, x_local, y_local):
         # x_local arrives as (1, n_local, d) — this worker's shard
         x_local, y_local = x_local[0], y_local[0]
-        n_local, d = x_local.shape
+        n_local, _ = x_local.shape
         nb = n_local // block_size
         xb = x_local[: nb * block_size].reshape(nb, block_size, d)
         yb = y_local[: nb * block_size].reshape(nb, block_size)
+        blockfn = _make_worker_block(axis, c=c, grad_impl=grad_impl,
+                                     overlap=overlap, chunks=chunks, d=d)
 
-        def epoch(w, t):
+        def epoch(carry, t):
             alpha = 1.0 / (1.0 + t.astype(w.dtype))
-            def block(w, xy):
-                xblk, yblk = xy
-                w_local = w - alpha * block_grad(w, xblk, yblk, c, grad_impl)
-                return jax.lax.pmean(w_local, axis), None
-            w, _ = jax.lax.scan(block, w, (xb, yb))
-            return w, None
+            def blk(carry, xy):
+                return blockfn(carry, xy[0], xy[1], alpha), None
+            carry, _ = jax.lax.scan(blk, carry, (xb, yb))
+            return carry, None
 
-        w, _ = jax.lax.scan(epoch, w, jnp.arange(epochs))
-        return w
+        carry, _ = jax.lax.scan(epoch, _carry_init(w, overlap=overlap,
+                                                   chunks=chunks),
+                                jnp.arange(epochs))
+        return _carry_flush(carry, axis, overlap=overlap, d=d)
 
     fn = jax.shard_map(worker, mesh=mesh,
                        in_specs=(P(), P(axis), P(axis)), out_specs=P(),
@@ -216,18 +360,23 @@ def _dms_shard_map(w0, xs, ys, *, epochs: int, block_size: int, c: float,
 def dms(w0: jax.Array, x: np.ndarray, y: np.ndarray, *, workers: int,
         epochs: int, block_size: int, c: float = 1.0,
         grad_impl: str = "jnp", backend: str = "vmap",
-        mesh=None, axis: str = "data") -> jax.Array:
+        mesh=None, axis: str = "data", overlap: str = "none",
+        chunks: int = 4) -> jax.Array:
     """Algorithm 3 entry point. ``block_size`` is points per worker per sync
-    (the paper's MSF knob: larger block ⇒ lower sync frequency)."""
+    (the paper's MSF knob: larger block ⇒ lower sync frequency);
+    ``overlap`` ∈ {"none", "delayed", "chunked"} selects how the residual
+    sync is taken off the critical path (module docstring)."""
     xs, ys = _shard_data(np.asarray(x), np.asarray(y), workers)
     xs, ys = jnp.asarray(xs), jnp.asarray(ys)
     if backend == "vmap":
         return _dms_vmap(w0, xs, ys, epochs=epochs, block_size=block_size,
-                         c=c, grad_impl=grad_impl)
+                         c=c, grad_impl=grad_impl, overlap=overlap,
+                         chunks=chunks)
     if backend == "shard_map":
         assert mesh is not None
         return _dms_shard_map(w0, xs, ys, epochs=epochs, block_size=block_size,
-                              c=c, grad_impl=grad_impl, mesh=mesh, axis=axis)
+                              c=c, grad_impl=grad_impl, mesh=mesh, axis=axis,
+                              overlap=overlap, chunks=chunks)
     raise ValueError(backend)
 
 
@@ -236,27 +385,127 @@ def dms(w0: jax.Array, x: np.ndarray, y: np.ndarray, *, workers: int,
 # ---------------------------------------------------------------------------
 
 def dms_timed_steps(mesh, axis: str, *, block_size: int, c: float = 1.0,
-                    grad_impl: str = "jnp"):
+                    grad_impl: str = "jnp", overlap: str = "none",
+                    chunks: int = 4):
     """Returns (compute_step, sync_step) jitted separately so benchmarks can
     time computation vs communication — the paper's Figs 10–12 methodology
-    (they instrument around MPI_AllReduce the same way)."""
+    (they instrument around MPI_AllReduce the same way).
+
+    ``overlap`` changes the sync step's signature (compute is unchanged —
+    per-worker block update from per-worker models):
+
+        none:    sync(w_locals) → w                       (blocking pmean)
+        delayed: sync(w_start_locals, w_end_locals, pending)
+                     → (w_new_locals, new_pending)        (stale-by-one)
+        chunked: sync(w_end_locals, cnt) → w_new_locals   (one segment;
+                 d must be divisible by ``chunks``; caller increments cnt)
+    """
 
     def compute(w, xb, yb, alpha):
         # per-worker block update, NO sync. xb: (K, bs, d) sharded over axis.
+        # w: replicated (d,) for overlap="none", per-worker (K, d) otherwise.
+        w_spec = P() if overlap == "none" else P(axis)
         def worker(w, xw, yw):
-            g = block_grad(w, xw[0], yw[0], c, grad_impl)
-            return (w - alpha * g)[None]   # (1, d) → (K, d) globally
+            wl = w if overlap == "none" else w[0]
+            g = block_grad(wl, xw[0], yw[0], c, grad_impl)
+            return (wl - alpha * g)[None]   # (1, d) → (K, d) globally
         f = jax.shard_map(worker, mesh=mesh,
-                          in_specs=(P(), P(axis), P(axis)),
+                          in_specs=(w_spec, P(axis), P(axis)),
                           out_specs=P(axis),
                           axis_names={axis}, check_vma=False)
         return f(w, xb, yb)
 
-    def sync(w_locals):
-        def worker(wl):
-            return jax.lax.pmean(wl[0], axis)
-        f = jax.shard_map(worker, mesh=mesh, in_specs=(P(axis),),
-                          out_specs=P(), axis_names={axis}, check_vma=False)
-        return f(w_locals)
+    if overlap == "none":
+        def sync(w_locals):
+            def worker(wl):
+                return jax.lax.pmean(wl[0], axis)
+            f = jax.shard_map(worker, mesh=mesh, in_specs=(P(axis),),
+                              out_specs=P(), axis_names={axis},
+                              check_vma=False)
+            return f(w_locals)
+    elif overlap == "delayed":
+        def sync(w_start_locals, w_end_locals, pending):
+            def worker(ws, we, pend):
+                delta = we[0] - ws[0]
+                mean = jax.lax.pmean(delta, axis)
+                return (we[0] + pend[0])[None], (mean - delta)[None]
+            f = jax.shard_map(worker, mesh=mesh,
+                              in_specs=(P(axis), P(axis), P(axis)),
+                              out_specs=(P(axis), P(axis)),
+                              axis_names={axis}, check_vma=False)
+            return f(w_start_locals, w_end_locals, pending)
+    elif overlap == "chunked":
+        def sync(w_end_locals, cnt):
+            d = w_end_locals.shape[-1]
+            assert d % chunks == 0, (d, chunks)
+            seg = d // chunks
+            def worker(we, cnt):
+                w = we[0]
+                idx = cnt % chunks
+                row = jax.lax.dynamic_slice(w, (idx * seg,), (seg,))
+                row = jax.lax.pmean(row, axis)
+                return jax.lax.dynamic_update_slice(w, row, (idx * seg,))[None]
+            f = jax.shard_map(worker, mesh=mesh, in_specs=(P(axis), P()),
+                              out_specs=P(axis), axis_names={axis},
+                              check_vma=False)
+            return f(w_end_locals, cnt)
+    else:
+        raise ValueError(f"unknown overlap mode: {overlap!r}")
 
     return jax.jit(compute), jax.jit(sync)
+
+
+# ---------------------------------------------------------------------------
+# single-block stepper — the unit the overlap benchmark times and the
+# jaxpr/HLO overlap test inspects
+# ---------------------------------------------------------------------------
+
+def dms_stepper_init(w0: jax.Array, workers: int, *, overlap: str = "none",
+                     chunks: int = 4):
+    """Global (stacked) initial carry for :func:`dms_block_stepper`."""
+    d = w0.shape[0]
+    wk = jnp.broadcast_to(w0, (workers, d))
+    if overlap == "none":
+        return {"w": wk}
+    if overlap == "delayed":
+        return {"w": wk, "pending": jnp.zeros((workers, d), w0.dtype)}
+    if overlap == "chunked":
+        dp = _padded_width(d, chunks)
+        wp = jnp.zeros((workers, dp), w0.dtype).at[:, :d].set(wk)
+        return {"w": wp, "cnt": jnp.zeros((), jnp.int32)}
+    raise ValueError(f"unknown overlap mode: {overlap!r}")
+
+
+def dms_block_stepper(mesh, axis: str, *, d: int, c: float = 1.0,
+                      grad_impl: str = "jnp", overlap: str = "none",
+                      chunks: int = 4):
+    """One DMS block (compute + boundary sync) as a jittable step:
+
+        step(carry, xblk, yblk, alpha) → carry
+
+    with ``carry`` from :func:`dms_stepper_init` (leaves carry a leading
+    worker dim sharded over ``axis``; ``cnt`` is replicated) and ``xblk``
+    (K, bs, d) / ``yblk`` (K, bs) sharded over ``axis``. Not jitted — wrap
+    in ``jax.jit``/``lax.scan`` for timing, or ``jax.make_jaxpr`` to verify
+    the overlap property (delayed: no dot depends on the block's pmean).
+    """
+    blockfn = _make_worker_block(axis, c=c, grad_impl=grad_impl,
+                                 overlap=overlap, chunks=chunks, d=d)
+    cspec = {"w": P(axis)}
+    if overlap == "delayed":
+        cspec["pending"] = P(axis)
+    if overlap == "chunked":
+        cspec["cnt"] = P()
+
+    def step(carry, xblk, yblk, alpha):
+        def worker(carry, xw, yw):
+            local = {k: (v if k == "cnt" else v[0]) for k, v in carry.items()}
+            out = blockfn(local, xw[0], yw[0], alpha)
+            return {k: (v if k == "cnt" else v[None]) for k, v in out.items()}
+        f = jax.shard_map(worker, mesh=mesh,
+                          in_specs=(cspec, P(axis), P(axis)),
+                          out_specs=cspec,
+                          axis_names={axis}, check_vma=False)
+        return f(carry, xblk, yblk)
+
+    return step

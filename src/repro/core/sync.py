@@ -9,25 +9,50 @@ into the sync-point transformation applied inside the compiled train block:
     sync_point(params_start, params_end, sync_state, cfg, axis)
         → (new_params, new_sync_state)
 
-Semantics per strategy (all reduce over the *replica* mesh axis):
+Strategy × overlap matrix (all reduce over the *replica* mesh axis):
 
-* ``sync_every_step`` — no replica axis at all; gradients are averaged by
-  XLA's data-parallel partitioning every step (paper's MSF=1 analog). The
-  sync engine is bypassed; provided here only for config completeness.
-* ``periodic`` — parameter averaging every H local steps (paper's DMS):
-  ``w ← mean_K(w_local)``, realized as ``w_start + mean_K(delta)``.
-* ``hierarchical`` — same as periodic but the replica axis is the *pod*
-  (DCN) axis while the intra-pod data axis still syncs every step — the
-  TPU-native placement of the paper's optimization (apply MSF to the
-  slowest link).
+=================  ==========================================================
+``strategy``       when the sync point runs
+=================  ==========================================================
+sync_every_step    never (XLA's data-parallel grad all-reduce every step;
+                   the engine is bypassed — config completeness only)
+periodic           every H local steps (paper's DMS): ``w ← mean_K(w_local)``
+hierarchical       as periodic, but the replica axis is the *pod* (DCN) axis
+                   while the intra-pod data axis still syncs every step
+=================  ==========================================================
+
+=================  ==========================================================
+``overlap``        what the sync point does when it runs
+=================  ==========================================================
+none               blocking: ``w ← w_start + mean_K(Δ)`` at the boundary —
+                   the paper's semantics, bit-exact DMS ≡ SRDMS
+delayed            stale-by-one: block *i* computes ``mean_K(Δᵢ)`` but the
+                   result is applied at the end of block *i+1*; this block's
+                   params depend only on the *previous* mean, so the
+                   collective is free to run under block *i+1*'s compute.
+                   Each replica's params stay ``anchor + own latest Δ``;
+                   divergence is bounded by one block's local drift
+                   (Stich 2018's local-SGD staleness regime)
+chunked            partial: the parameter tree is split into ``cfg.chunks``
+                   byte-balanced shards (equal-size leaves round-robin) and
+                   one shard is value-averaged per block
+                   (``w_leaf ← mean_K(w_leaf)``); each leaf syncs every
+                   ``chunks·H`` steps and per-sync wire bytes shrink
+                   ``chunks``×
+=================  ==========================================================
 
 Optional modifiers (beyond-paper, composable):
 
 * ``compression="int8"`` — error-feedback int8 delta exchange
   (:mod:`repro.core.compression`), shrinking the sync collective 4×.
+* ``compression="int16"`` — fixed-point 2-byte all-reduce wire.
 * ``slowmo > 0`` — outer momentum on the averaged delta (SlowMo, Wang et
-  al.): recovers accuracy at very low MSF; state is one replicated
-  momentum pytree.
+  al.); composes with ``overlap="delayed"`` (the momentum step is taken on
+  the freshly averaged delta, applied one block late), not with
+  ``"chunked"`` (no whole-tree delta to step on).
+
+Byte accounting lives in :mod:`repro.core.costmodel` (shared with the MSF
+auto-tuner so the two can never drift).
 """
 from __future__ import annotations
 
@@ -35,22 +60,42 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config.base import SyncConfig
 from repro.core import compression as C
+from repro.core import costmodel
 
 
 def needs_replica_axis(cfg: SyncConfig) -> bool:
     return cfg.strategy in ("periodic", "hierarchical")
 
 
+def validate(cfg: SyncConfig) -> None:
+    if cfg.overlap not in ("none", "delayed", "chunked"):
+        raise ValueError(f"unknown overlap mode: {cfg.overlap!r}")
+    if cfg.overlap == "chunked" and cfg.slowmo > 0.0:
+        raise ValueError("slowmo requires a whole-tree sync delta; "
+                         "overlap='chunked' averages one shard at a time")
+    if cfg.overlap == "chunked" and cfg.chunks < 1:
+        raise ValueError(f"chunks must be >= 1, got {cfg.chunks}")
+
+
 def init_sync_state(cfg: SyncConfig, params) -> Dict[str, Any]:
+    validate(cfg)
     state: Dict[str, Any] = {}
+    zeros = lambda: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
     if cfg.compression in ("int8", "int16"):
         state["ef"] = C.init_error_feedback(params)
     if cfg.slowmo > 0.0:
-        state["slowmo_m"] = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        state["slowmo_m"] = zeros()
+    if cfg.overlap == "delayed":
+        # pending correction = (averaged step delta − own local delta) of the
+        # previous block; applied to this block's end params (stale-by-one)
+        state["pending"] = zeros()
+    if cfg.overlap == "chunked":
+        state["chunk_idx"] = jnp.zeros((), jnp.int32)
     return state
 
 
@@ -61,29 +106,28 @@ def sync_state_axes(cfg: SyncConfig, param_axes) -> Dict[str, Any]:
         state["ef"] = param_axes
     if cfg.slowmo > 0.0:
         state["slowmo_m"] = param_axes
+    if cfg.overlap == "delayed":
+        state["pending"] = param_axes
+    if cfg.overlap == "chunked":
+        state["chunk_idx"] = ()
     return state
 
 
-def sync_point(params_start, params_end, sync_state: Dict[str, Any],
-               cfg: SyncConfig, axis: str,
-               param_axes=None) -> Tuple[Any, Dict[str, Any]]:
-    """One model synchronization, inside shard_map with ``axis`` manual.
+# ---------------------------------------------------------------------------
+# the mean-exchange primitive (shared by every overlap mode)
+# ---------------------------------------------------------------------------
 
-    ``params_start`` — the (identical-across-replicas) params the block
-    started from; ``params_end`` — this replica's drifted params.
-    ``param_axes`` — per-leaf logical axes (keeps the compressed-sync
-    buffers sharded; see compression.allgather_mean_dequant).
+def _exchange_mean(values, ef, cfg: SyncConfig, axis: str, param_axes):
+    """Replica-mean of a pytree over ``axis`` under cfg.compression.
+
+    Returns ``(mean_tree, new_ef_tree_or_None)``. ``values`` may be deltas
+    (blocking/delayed) or raw parameter values (chunked); error feedback
+    carries the quantization residual either way.
     """
-    delta = jax.tree.map(
-        lambda e, s: e.astype(jnp.float32) - s.astype(jnp.float32),
-        params_end, params_start)
-    new_state = dict(sync_state)
-
     if cfg.compression == "int8":
-        q, s, new_ef = C.compress_tree(delta, sync_state["ef"])
-        mean_delta = C.allgather_mean_dequant(q, s, axis, param_axes)
-        new_state["ef"] = new_ef
-    elif cfg.compression == "int16":
+        q, s, new_ef = C.compress_tree(values, ef)
+        return C.allgather_mean_dequant(q, s, axis, param_axes), new_ef
+    if cfg.compression == "int16":
         # fixed-point 2-byte wire via an ordinary (shape-preserving)
         # all-reduce: a psum of int16 composes cleanly with auto-axis
         # sharding, where the int8 all-gather materializes full leaves
@@ -101,41 +145,209 @@ def sync_point(params_start, params_end, sync_state: Dict[str, Any],
             summed = jax.lax.psum(q, axis).astype(jnp.float32)
             mean = summed * scale / jax.lax.psum(1, axis)
             return mean, v - q.astype(jnp.float32) * scale
-        out = jax.tree.map(int16_leaf, delta, sync_state["ef"])
+        out = jax.tree.map(int16_leaf, values, ef)
         is_t = lambda x: isinstance(x, tuple)
-        mean_delta = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
-        new_state["ef"] = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
-    else:
-        mean_delta = jax.tree.map(lambda d: jax.lax.pmean(d, axis), delta)
+        mean = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+        new_ef = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+        return mean, new_ef
+    return jax.tree.map(lambda d: jax.lax.pmean(d, axis), values), None
 
-    if cfg.slowmo > 0.0:
-        m = jax.tree.map(
-            lambda mm, d: cfg.slowmo * mm + d, sync_state["slowmo_m"], mean_delta)
-        new_state["slowmo_m"] = m
-        step_delta = jax.tree.map(lambda mm: cfg.slowmo_lr * mm, m)
-    else:
-        step_delta = mean_delta
 
-    new_params = jax.tree.map(
-        lambda s, d: (s.astype(jnp.float32) + d).astype(s.dtype),
-        params_start, step_delta)
+def _slowmo_step(mean_delta, sync_state, new_state, cfg: SyncConfig):
+    """Outer momentum on the averaged delta; returns the applied delta."""
+    if cfg.slowmo <= 0.0:
+        return mean_delta
+    m = jax.tree.map(lambda mm, d: cfg.slowmo * mm + d,
+                     sync_state["slowmo_m"], mean_delta)
+    new_state["slowmo_m"] = m
+    return jax.tree.map(lambda mm: cfg.slowmo_lr * mm, m)
+
+
+def _f32_delta(params_end, params_start):
+    return jax.tree.map(
+        lambda e, s: e.astype(jnp.float32) - s.astype(jnp.float32),
+        params_end, params_start)
+
+
+def _apply_f32(params, delta):
+    return jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+        params, delta)
+
+
+# ---------------------------------------------------------------------------
+# sync point — one call per block boundary
+# ---------------------------------------------------------------------------
+
+def sync_point(params_start, params_end, sync_state: Dict[str, Any],
+               cfg: SyncConfig, axis: str,
+               param_axes=None) -> Tuple[Any, Dict[str, Any]]:
+    """One model synchronization, inside shard_map with ``axis`` manual.
+
+    ``params_start`` — the params the block started from (identical across
+    replicas for ``overlap="none"``; per-replica under delayed/chunked);
+    ``params_end`` — this replica's drifted params.
+    ``param_axes`` — per-leaf logical axes (keeps the compressed-sync
+    buffers sharded; see compression.allgather_mean_dequant).
+    """
+    if cfg.overlap == "delayed":
+        return _sync_point_delayed(params_start, params_end, sync_state,
+                                   cfg, axis, param_axes)
+    if cfg.overlap == "chunked":
+        return _sync_point_chunked(params_end, sync_state, cfg, axis,
+                                   param_axes)
+
+    delta = _f32_delta(params_end, params_start)
+    new_state = dict(sync_state)
+    mean_delta, new_ef = _exchange_mean(delta, sync_state.get("ef"), cfg,
+                                        axis, param_axes)
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    step_delta = _slowmo_step(mean_delta, sync_state, new_state, cfg)
+    return _apply_f32(params_start, step_delta), new_state
+
+
+def _sync_point_delayed(params_start, params_end, sync_state, cfg, axis,
+                        param_axes):
+    """Stale-by-one averaging: launch this block's mean, apply last block's.
+
+    The returned params depend only on ``sync_state["pending"]`` (computed
+    at the *previous* boundary), never on this boundary's collective — so in
+    the compiled schedule the collective's first consumer is the *next*
+    block's sync tail and XLA is free to run it under that block's compute.
+    Replica k's params stay ``anchor + own latest local delta``; applying
+    ``pending = mean_{i−1} − Δ_{i−1,k}`` swaps the stale local delta for its
+    average, keeping divergence bounded by one block's drift.
+    """
+    delta = _f32_delta(params_end, params_start)
+    new_state = dict(sync_state)
+    mean_delta, new_ef = _exchange_mean(delta, sync_state.get("ef"), cfg,
+                                        axis, param_axes)
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    step_delta = _slowmo_step(mean_delta, sync_state, new_state, cfg)
+    # apply the PREVIOUS boundary's correction to this block's end params
+    new_params = _apply_f32(params_end, sync_state["pending"])
+    new_state["pending"] = jax.tree.map(lambda m, d: m - d, step_delta, delta)
     return new_params, new_state
 
 
-def collective_bytes_per_sync(param_bytes: int, world: int, cfg: SyncConfig) -> int:
-    """Analytic wire bytes of one sync (for napkin math / benchmarks).
+def chunk_assignment(leaves, chunks: int):
+    """Leaf index → shard id, byte-balanced (greedy largest-first onto the
+    lightest shard; ties broken by leaf order, so equal-size leaves land
+    round-robin). Balancing by *bytes* rather than leaf count is what makes
+    the cost model's per-sync ``/chunks`` wire accounting hold for skewed
+    trees — a leaf-count round-robin would let one shard carry the whole
+    embedding table. A single leaf larger than total/chunks still bounds
+    the worst boundary from below (no intra-leaf splitting here)."""
+    order = sorted(range(len(leaves)),
+                   key=lambda i: (-int(np.prod(leaves[i].shape)), i))
+    load = [0] * max(1, chunks)
+    assign = [0] * len(leaves)
+    for i in order:
+        s = min(range(len(load)), key=lambda rr: (load[rr], rr))
+        assign[i] = s
+        load[s] += int(np.prod(leaves[i].shape))
+    return assign
 
-    Ring all-reduce moves ``2·P·(K-1)/K`` bytes per device; int8 all-gather
-    moves ``P/4·(K-1)`` per device (fp32 accounting).
+
+def _sync_point_chunked(params_end, sync_state, cfg, axis, param_axes):
+    """Value-average one shard of the tree per boundary.
+
+    ``params_start`` is irrelevant: a chunked leaf may not have synced for
+    ``chunks`` blocks, so its replicas' block-start values already diverge —
+    consistency is re-established from the *end* values (``mean_K(w)``).
+    ``lax.switch`` keys the traced ``chunk_idx`` (replicated state, so every
+    replica takes the same branch) into per-shard branches; only the taken
+    branch's collective executes, so one boundary moves ~1/chunks of the
+    tree's bytes (shards are byte-balanced — see chunk_assignment).
     """
-    if cfg.compression == "int8":
-        return int(param_bytes / 4 * (world - 1))
-    if cfg.compression == "int16":
-        return int(2 * param_bytes / 4 * 2 * (world - 1) / world)
-    return int(2 * param_bytes * (world - 1) / world)
+    r = max(1, cfg.chunks)
+    idx = sync_state["chunk_idx"]
+    ef = sync_state.get("ef")
+    have_ef = ef is not None
+    ax_leaves = (jax.tree.leaves(
+        param_axes, is_leaf=lambda x: x is None or isinstance(x, tuple))
+        if param_axes is not None
+        else [None] * len(jax.tree.leaves(params_end)))
+    assign = chunk_assignment(jax.tree.leaves(params_end), r)
+
+    def make_branch(rr):
+        def branch(operands):
+            p_end, ef_in = operands
+            leaves, treedef = jax.tree.flatten(p_end)
+            ef_leaves = (jax.tree.leaves(ef_in) if have_ef
+                         else [None] * len(leaves))
+            # shard-rr leaf subset as {leaf_index: value} dict pytrees
+            sub = [i for i in range(len(leaves)) if assign[i] == rr]
+            vals = {i: leaves[i].astype(jnp.float32) for i in sub}
+            efs = {i: ef_leaves[i] for i in sub} if have_ef else None
+            axs = {i: ax_leaves[i] for i in sub}
+            mean, new_ef = _exchange_mean(vals, efs, cfg, axis, axs)
+            new_leaves = list(leaves)
+            new_ef_leaves = list(ef_leaves)
+            for i in sub:
+                new_leaves[i] = mean[i].astype(leaves[i].dtype)
+                if have_ef and new_ef is not None:
+                    new_ef_leaves[i] = new_ef[i]
+            out_p = jax.tree.unflatten(treedef, new_leaves)
+            out_ef = (jax.tree.unflatten(treedef, new_ef_leaves)
+                      if have_ef else ef_in)
+            return out_p, out_ef
+        return branch
+
+    operands = (params_end, ef)
+    new_params, new_ef = jax.lax.switch(
+        idx % r, [make_branch(rr) for rr in range(r)], operands)
+    new_state = dict(sync_state)
+    new_state["chunk_idx"] = idx + 1
+    if have_ef:
+        new_state["ef"] = new_ef
+    return new_params, new_state
+
+
+def flush_overlap(params, sync_state, cfg: SyncConfig, replica_dim: int = 0):
+    """Collapse overlap staleness to the fully synchronized model.
+
+    ``params``/``sync_state`` in the local-SGD stacked layout (leading
+    replica dim). Under ``delayed`` each replica sits at ``anchor + ownΔ``
+    with ``pending = stepΔ − ownΔ``, so ``params + pending`` is
+    ``anchor + stepΔ`` on every replica — the model with every sync applied,
+    *including* the slowmo momentum term inside stepΔ (a bare replica mean
+    would drop it). ``chunked`` replicas differ only by not-yet-synced drift
+    whose replica average is the consistent model. Call before
+    checkpointing/evaluating a state trained with ``overlap != "none"``
+    (see local_sgd.finalize_state). Returns the stacked layout with all
+    replicas equal.
+    """
+    if cfg.overlap == "none":
+        return params
+    if cfg.overlap == "delayed":
+        params = jax.tree.map(
+            lambda p, q: (p.astype(jnp.float32) + q).astype(p.dtype),
+            params, sync_state["pending"])
+
+    def leaf(p):
+        m = jnp.mean(p.astype(jnp.float32), axis=replica_dim, keepdims=True)
+        return jnp.broadcast_to(m, p.shape).astype(p.dtype)
+    return jax.tree.map(leaf, params)
+
+
+# ---------------------------------------------------------------------------
+# analytic byte accounting (delegates to the shared cost module)
+# ---------------------------------------------------------------------------
+
+def collective_bytes_per_sync(param_bytes: int, world: int,
+                              cfg: SyncConfig) -> int:
+    """Analytic wire bytes of one executed sync (napkin math / benchmarks).
+
+    Single source of truth: :func:`repro.core.costmodel.wire_bytes_per_sync`
+    (the MSF auto-tuner reads the same function).
+    """
+    return int(costmodel.wire_bytes_per_sync(param_bytes, world, cfg))
 
 
 def amortized_bytes_per_step(param_bytes: int, world: int, cfg: SyncConfig) -> float:
     if cfg.strategy == "sync_every_step":
-        return collective_bytes_per_sync(param_bytes, world, cfg)
-    return collective_bytes_per_sync(param_bytes, world, cfg) / max(1, cfg.period)
+        return costmodel.wire_bytes_per_sync(param_bytes, world, cfg)
+    return costmodel.wire_bytes_per_sync(param_bytes, world, cfg) / max(1, cfg.period)

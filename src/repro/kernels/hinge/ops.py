@@ -4,10 +4,16 @@ Pads d to a lane multiple (128) and n to a block multiple. Padded rows get
 y = 0 so their hinge contribution vanishes (y multiplies every term);
 padded feature columns are zero in both X and w so they contribute nothing
 to margins and stay zero in the gradient.
+
+``interpret`` defaults to *auto*: compiled Pallas on TPU/GPU backends, the
+interpreter only on CPU (where Pallas has no compiled lowering). The old
+default of ``interpret=True`` everywhere meant ``grad_impl="pallas"`` ran
+the interpreter even on accelerators — the hot path never compiled.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,10 +27,18 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def default_interpret() -> bool:
+    """Interpret only where Pallas cannot compile (CPU backends)."""
+    return jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")
+
+
 @functools.partial(jax.jit, static_argnames=("c", "block_n", "interpret"))
 def hinge_block_grad(w: jax.Array, x: jax.Array, y: jax.Array, c: float = 1.0,
-                     *, block_n: int = 0, interpret: bool = True) -> jax.Array:
+                     *, block_n: int = 0,
+                     interpret: Optional[bool] = None) -> jax.Array:
     """Drop-in for :func:`repro.kernels.hinge.ref.hinge_block_grad`."""
+    if interpret is None:
+        interpret = default_interpret()
     n, d = x.shape
     dp = _round_up(d, _LANE)
     if block_n <= 0:

@@ -11,6 +11,41 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 
+# ---------------------------------------------------------------------------
+# optional-hypothesis shim. ``hypothesis`` is a dev-only dependency
+# (requirements-dev.txt); when it is absent the property-based tests must
+# *skip*, not kill collection. Test modules import via
+# ``try: from hypothesis import ... except ImportError: from conftest import ...``
+# and get these stand-ins: ``given`` marks the test skipped, ``settings`` is
+# a pass-through, ``st`` yields inert strategy placeholders.
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed "
+                       "(pip install -r requirements-dev.txt)")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            def strategy(*_args, **_kwargs):
+                return None
+            return strategy
+
+    st = _StrategyStub()
+
+
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
     """Run a python snippet in a subprocess with N host devices."""
     env = dict(os.environ)

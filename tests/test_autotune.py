@@ -1,6 +1,9 @@
 """MSF auto-tuner: the paper's manual sweep as an algorithm."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dev dep: property tests skip
+    from conftest import given, settings, st
 
 from repro.config import SyncConfig
 from repro.core.autotune import (TuneInputs, choose_period, drift_cap,

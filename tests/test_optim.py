@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dev dep: property tests skip
+    from conftest import given, settings, st
 
 from repro.config import OptimizerConfig
 from repro.optim import apply_updates, init_opt_state, make_schedule

@@ -1,0 +1,509 @@
+"""Overlap-aware sync engine: delayed/chunked semantics, cost model, bytes.
+
+Covers the tentpole's contracts:
+
+* ``overlap="none"`` preserves the paper's DMS ≡ SRDMS identity bit-exact.
+* ``overlap="delayed"`` equals an independently-written stale-by-one
+  reference simulation in fp64.
+* ``overlap="chunked"`` syncs each segment/leaf exactly once per R blocks.
+* The delayed block's sync collective is not a dependency of any compute
+  (dot) in the same or the following block — verifiable from the jaxpr.
+* ``collective_bytes_per_sync`` and the autotuner's ``sync_time_s`` agree
+  for every (compression × overlap) combination (shared cost module).
+* ``choose_period(overlap="delayed")`` never picks a larger H than blocking.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SyncConfig
+from repro.core import svm
+from repro.core import sync as S
+from repro.core.autotune import TuneInputs, choose_period, predicted_step_time, sync_time_s
+from repro.core.costmodel import overlapped_step_time, wire_bytes_per_sync
+from conftest import run_with_devices
+
+
+def _toy(n=256, d=10, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = np.where(rng.random(n) > 0.5, 1.0, -1.0).astype(np.float32)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# semantics
+# ---------------------------------------------------------------------------
+
+class TestOverlapNone:
+    def test_none_is_bitexact_default(self):
+        """overlap="none" is the same compiled path as the paper default."""
+        x, y = _toy()
+        w0 = jnp.zeros(10)
+        wa = svm.dms(w0, x, y, workers=4, epochs=2, block_size=4)
+        wb = svm.dms(w0, x, y, workers=4, epochs=2, block_size=4,
+                     overlap="none")
+        np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))
+
+    def test_none_keeps_dms_srdms_identity(self):
+        """DMS(K, s_b) ≡ SRDMS(K·s_b) still holds with overlap="none"."""
+        from test_svm_core import _interleave
+        k, sb = 4, 2
+        x, y = _toy()
+        x, y, xi, yi = _interleave(x, y, k, sb)
+        w0 = jnp.zeros(10)
+        wd = svm.dms(w0, x, y, workers=k, epochs=2, block_size=sb,
+                     overlap="none")
+        wr = svm.srdms(w0, jnp.asarray(xi), jnp.asarray(yi), epochs=2,
+                       block_size=k * sb)
+        np.testing.assert_allclose(np.asarray(wd), np.asarray(wr),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestDelayed:
+    def test_delayed_equals_stale_reference_fp64(self):
+        """dms(overlap="delayed") == an independent numpy stale-by-one
+        simulation, in fp64 (per-worker models carry anchor + own last Δ;
+        the mean of block i lands at the end of block i+1)."""
+        code = """
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp, numpy as np
+from repro.core import svm
+
+rng = np.random.default_rng(3)
+k, n, d, bs, epochs, c = 4, 128, 6, 4, 3, 1.0
+x = rng.normal(size=(n, d))
+y = np.where(rng.random(n) > 0.5, 1.0, -1.0)
+w0 = jnp.zeros(d, jnp.float64)
+
+w_jax = np.asarray(svm.dms(w0, x, y, workers=k, epochs=epochs,
+                           block_size=bs, overlap="delayed"))
+
+# ---- independent stale-by-one reference ----
+n_local = n // k
+xs = x[: n_local * k].reshape(k, n_local, d)
+ys = y[: n_local * k].reshape(k, n_local)
+wk = np.zeros((k, d))
+pending = np.zeros((k, d))
+for t in range(epochs):
+    alpha = 1.0 / (1.0 + t)
+    for b in range(n_local // bs):
+        deltas = np.zeros((k, d))
+        for kk in range(k):
+            xb = xs[kk, b * bs:(b + 1) * bs]
+            yb = ys[kk, b * bs:(b + 1) * bs]
+            margins = 1.0 - yb * (xb @ wk[kk])
+            viol = (margins > 0).astype(np.float64)
+            g = wk[kk] - c * ((viol * yb) @ xb) / bs
+            deltas[kk] = -alpha * g
+        mean = deltas.mean(0)
+        wk = wk + deltas + pending        # apply own Δ + stale correction
+        pending = mean[None] - deltas     # next block's correction
+w_ref = wk.mean(0)                        # flush: anchor + meanΔ_last
+
+err = np.abs(w_jax - w_ref).max()
+print("ERR", err)
+assert err < 1e-12, err
+"""
+        out = run_with_devices(code, n_devices=1)
+        assert float(out.strip().split()[-1]) < 1e-12
+
+    def test_delayed_shard_map_matches_vmap(self):
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import svm
+from repro.launch.mesh import make_test_mesh
+rng = np.random.default_rng(0)
+x = rng.normal(size=(256, 12)).astype(np.float32)
+y = np.where(rng.random(256) > 0.5, 1.0, -1.0).astype(np.float32)
+w0 = jnp.zeros(12)
+mesh = make_test_mesh((8,), ("data",))
+for ov in ("delayed", "chunked"):
+    wv = svm.dms(w0, x, y, workers=8, epochs=3, block_size=4, overlap=ov)
+    with jax.set_mesh(mesh):
+        ws = svm.dms(w0, x, y, workers=8, epochs=3, block_size=4,
+                     backend="shard_map", mesh=mesh, overlap=ov)
+    np.testing.assert_allclose(np.asarray(wv), np.asarray(ws),
+                               rtol=1e-5, atol=1e-6)
+print("OK")
+"""
+        assert "OK" in run_with_devices(code)
+
+    def test_delayed_converges(self, ijcnn_small):
+        ds = ijcnn_small
+        w = svm.dms(jnp.zeros(ds.features), ds.x_train, ds.y_train,
+                    workers=8, epochs=20, block_size=16, overlap="delayed")
+        acc = float(svm.accuracy(w, jnp.asarray(ds.x_cv),
+                                 jnp.asarray(ds.y_cv)))
+        assert acc > 0.75, acc
+
+
+class TestChunked:
+    def test_chunked_syncs_each_segment_once_per_round(self):
+        """With alpha=0 (no drift) and divergent worker models, segment i
+        becomes the worker mean exactly at block i — one full round of R
+        blocks makes every coordinate consistent, and never before."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import svm
+from repro.launch.mesh import make_test_mesh
+k, d, chunks, bs = 4, 10, 3, 2
+mesh = make_test_mesh((k,), ("data",))
+rng = np.random.default_rng(0)
+w_init = rng.normal(size=(k, d)).astype(np.float32)
+with jax.set_mesh(mesh):
+    step = svm.dms_block_stepper(mesh, "data", d=d, overlap="chunked",
+                                 chunks=chunks)
+    carry = svm.dms_stepper_init(jnp.zeros(d), k, overlap="chunked",
+                                 chunks=chunks)
+    dp = carry["w"].shape[1]
+    seg = dp // chunks
+    carry["w"] = jnp.zeros((k, dp)).at[:, :d].set(w_init)
+    xb = jnp.zeros((k, bs, d), jnp.float32)
+    yb = jnp.zeros((k, bs), jnp.float32)
+    wp = np.zeros((k, dp), np.float32)
+    wp[:, :d] = w_init
+    mean = wp.mean(0)
+    for i in range(chunks):
+        carry = jax.jit(step)(carry, xb, yb, jnp.float32(0.0))
+        w = np.asarray(carry["w"])
+        # segments 0..i synced to the mean, the rest untouched
+        for s in range(chunks):
+            lo, hi = s * seg, (s + 1) * seg
+            if s <= i:
+                np.testing.assert_allclose(
+                    w[:, lo:hi], np.broadcast_to(mean[lo:hi], (k, hi - lo)),
+                    rtol=1e-6, atol=1e-7)
+            else:
+                np.testing.assert_array_equal(w[:, lo:hi], wp[:, lo:hi])
+    assert int(carry["cnt"]) == chunks
+print("OK")
+"""
+        assert "OK" in run_with_devices(code, n_devices=4)
+
+    def test_chunked_tree_round_robin(self):
+        """sync_point(overlap="chunked") on a 3-leaf tree, R=3: exactly the
+        leaves of shard (idx % R) are replaced by their replica mean."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import sync as S
+from repro.config import SyncConfig
+n_rep = 4
+cfg = SyncConfig(strategy="periodic", overlap="chunked", chunks=3)
+mesh = jax.make_mesh((n_rep,), ("pod",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+vals = jnp.asarray(rng.normal(size=(n_rep, 3, 5)), jnp.float32)
+
+def body(vals):
+    v = vals[0]
+    params = {"a": v[0], "b": v[1], "c": v[2]}
+    st = S.init_sync_state(cfg, params)
+    outs = []
+    for _ in range(3):
+        params, st = S.sync_point(params, params, st, cfg, "pod")
+        outs.append(jnp.stack([params["a"], params["b"], params["c"]]))
+    return jnp.stack(outs)[None]
+
+f = jax.shard_map(body, mesh=mesh, in_specs=(P("pod"),),
+                  out_specs=P("pod"), axis_names={"pod"}, check_vma=False)
+with jax.set_mesh(mesh):
+    out = np.asarray(jax.jit(f)(vals))     # (n_rep, 3 calls, 3 leaves, 5)
+base = np.asarray(vals)
+mean = base.mean(0)
+for call in range(3):
+    for leaf in range(3):
+        got = out[:, call, leaf]
+        if leaf <= call:     # leaf i syncs at call i (shard id = leaf idx)
+            np.testing.assert_allclose(
+                got, np.broadcast_to(mean[leaf], got.shape),
+                rtol=1e-6, atol=1e-7)
+        else:
+            np.testing.assert_array_equal(got, base[:, leaf])
+print("OK")
+"""
+        assert "OK" in run_with_devices(code, n_devices=4)
+
+    def test_chunked_converges(self, ijcnn_small):
+        ds = ijcnn_small
+        w = svm.dms(jnp.zeros(ds.features), ds.x_train, ds.y_train,
+                    workers=8, epochs=20, block_size=16, overlap="chunked",
+                    chunks=4)
+        acc = float(svm.accuracy(w, jnp.asarray(ds.x_cv),
+                                 jnp.asarray(ds.y_cv)))
+        assert acc > 0.75, acc
+
+    def test_slowmo_chunked_rejected(self):
+        with pytest.raises(ValueError):
+            S.init_sync_state(SyncConfig(overlap="chunked", slowmo=0.5),
+                              {"w": jnp.zeros(4)})
+
+    def test_chunk_assignment_balances_bytes(self):
+        """Shards are byte-balanced: a skewed tree must not put the huge
+        leaf plus extras on one shard while another idles."""
+        leaves = [jnp.zeros((100,)), jnp.zeros((1,)), jnp.zeros((1,)),
+                  jnp.zeros((1,))]
+        assign = S.chunk_assignment(leaves, 2)
+        big_shard = assign[0]
+        assert all(a != big_shard for a in assign[1:]), assign
+        # equal-size leaves fall back to round-robin (ties by leaf order)
+        assign_eq = S.chunk_assignment([jnp.zeros(5)] * 3, 3)
+        assert sorted(assign_eq) == [0, 1, 2], assign_eq
+
+
+class TestFlush:
+    def test_flush_overlap_recovers_synchronized_model(self):
+        """Delayed replicas sit at anchor + ownΔ with
+        pending = stepΔ − ownΔ; flush must return anchor + stepΔ on every
+        replica — exact even when stepΔ carries a slowmo momentum term that
+        a bare replica mean would drop."""
+        rng = np.random.default_rng(0)
+        anchor = rng.normal(size=(6,)).astype(np.float32)
+        deltas = rng.normal(size=(4, 6)).astype(np.float32)
+        # stepΔ ≠ meanΔ (simulates slowmo momentum folded into the step)
+        step_delta = deltas.mean(0) + 0.9 * rng.normal(size=6).astype(np.float32)
+        stacked = {"w": jnp.asarray(anchor[None] + deltas)}
+        sync_state = {"pending": {"w": jnp.asarray(step_delta[None] - deltas)}}
+        cfg = SyncConfig(strategy="periodic", overlap="delayed")
+        flushed = S.flush_overlap(stacked, sync_state, cfg)
+        want = anchor + step_delta
+        np.testing.assert_allclose(
+            np.asarray(flushed["w"]), np.broadcast_to(want, (4, 6)),
+            rtol=1e-5, atol=1e-5)
+        # overlap="none" passes through untouched (replicas already equal)
+        same = S.flush_overlap(stacked, {}, SyncConfig(strategy="periodic"))
+        np.testing.assert_array_equal(np.asarray(same["w"]),
+                                      np.asarray(stacked["w"]))
+
+    def test_finalize_state_clears_pending(self):
+        from repro.config import TrainConfig
+        from repro.core import local_sgd as LS
+        cfg = TrainConfig(sync=SyncConfig(strategy="periodic",
+                                          overlap="delayed"))
+        state = {"params": {"w": jnp.arange(8, dtype=jnp.float32
+                                            ).reshape(2, 4)},
+                 "opt": {}, "step": jnp.zeros((), jnp.int32),
+                 "sync": {"pending": {"w": jnp.ones((2, 4))}}}
+        out = LS.finalize_state(state, cfg)
+        leaf = np.asarray(out["params"]["w"])
+        np.testing.assert_array_equal(leaf[0], leaf[1])  # replicas equal
+        assert float(np.abs(np.asarray(out["sync"]["pending"]["w"])).max()) == 0.0
+
+
+class TestLocalSGDOverlap:
+    def test_lm_block_runs_and_finalizes(self):
+        """The LM trainer path: delayed/chunked thread through sync_point,
+        eval_at_sync evaluates the *synced* model, and finalize_state
+        collapses the replicas to one consistent model."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import (MeshConfig, OptimizerConfig, SyncConfig,
+                          TrainConfig, DataConfig, get_smoke)
+from repro.core import local_sgd as LS
+from repro.models.registry import build_model
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh_cfg = MeshConfig(shape=(2, 2, 2), axis_names=("pod", "data", "model"),
+                      replica_axis="pod")
+for ov in ("delayed", "chunked"):
+    cfg = TrainConfig(
+        model=get_smoke("smollm-360m"), mesh=mesh_cfg,
+        sync=SyncConfig(strategy="hierarchical", period=2, overlap=ov,
+                        chunks=3, eval_at_sync=True),
+        optimizer=OptimizerConfig(name="sgd", learning_rate=0.05),
+        data=DataConfig(seq_len=16, global_batch=8))
+    model = build_model(cfg.model)
+    with jax.set_mesh(mesh):
+        state = LS.init_state(model, cfg, jax.random.key(0), replicas=2)
+        step = LS.make_local_sgd_block(model, cfg, mesh)
+        rng = np.random.default_rng(0)
+        b = {"tokens": jnp.asarray(rng.integers(0, 512, (2, 8, 16)),
+                                   jnp.int32),
+             "targets": jnp.asarray(rng.integers(0, 512, (2, 8, 16)),
+                                    jnp.int32)}
+        for _ in range(3):
+            state, metrics = jax.jit(step)(state, b)
+        assert np.isfinite(float(metrics["loss"]))
+        assert np.isfinite(float(metrics["sync_eval_loss"]))
+        state = LS.finalize_state(state, cfg)
+        for leaf in jax.tree.leaves(jax.device_get(state["params"])):
+            np.testing.assert_array_equal(leaf[0], leaf[1])
+print("OK")
+"""
+        assert "OK" in run_with_devices(code, n_devices=8)
+
+
+# ---------------------------------------------------------------------------
+# the overlap property, mechanically: jaxpr dependency analysis
+# ---------------------------------------------------------------------------
+
+try:
+    from jax.extend.core import Literal as _Literal
+except ImportError:      # older jax
+    from jax.core import Literal as _Literal
+
+
+def _collective_taints_dot(jaxpr) -> bool:
+    """True iff any dot_general transitively consumes a psum output."""
+    tainted = set()
+    found = False
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        in_tainted = any(getattr(v, "count", None) is not None and v in tainted
+                         for v in eqn.invars
+                         if not isinstance(v, _Literal))
+        if prim == "dot_general" and in_tainted:
+            found = True
+        if prim.startswith("psum") or in_tainted:
+            tainted.update(v for v in eqn.outvars)
+    return found
+
+
+def _two_block_jaxpr(overlap: str, chunks: int = 2):
+    d, bs, k_axis = 8, 4, 4
+    blockfn = svm._make_worker_block("pod", c=1.0, grad_impl="jnp",
+                                     overlap=overlap, chunks=chunks, d=d)
+    dp = -(-d // chunks) * chunks if overlap == "chunked" else d
+    carry = {"w": jnp.zeros(dp)}
+    if overlap == "delayed":
+        carry["pending"] = jnp.zeros(d)
+    if overlap == "chunked":
+        carry["cnt"] = jnp.zeros((), jnp.int32)
+    xb = jnp.zeros((bs, d))
+    yb = jnp.zeros((bs,))
+
+    def two_blocks(carry, x1, y1, x2, y2):
+        c1 = blockfn(carry, x1, y1, 0.5)
+        return blockfn(c1, x2, y2, 0.5)
+
+    return jax.make_jaxpr(two_blocks, axis_env=[("pod", k_axis)])(
+        carry, xb, yb, xb, yb).jaxpr
+
+
+class TestOverlapDependencyStructure:
+    def test_blocking_collective_feeds_next_block_compute(self):
+        """Sanity: with blocking sync, block 2's dots DO consume block 1's
+        pmean — the collective is on the critical path."""
+        assert _collective_taints_dot(_two_block_jaxpr("none"))
+
+    def test_delayed_collective_feeds_no_compute(self):
+        """The overlap property: across two chained delayed blocks, no dot
+        depends on any sync collective — the pmean result only flows into
+        the pending correction (pure adds), so XLA can schedule the
+        collective concurrently with the next block's compute."""
+        assert not _collective_taints_dot(_two_block_jaxpr("delayed"))
+
+
+# ---------------------------------------------------------------------------
+# cost model + byte accounting
+# ---------------------------------------------------------------------------
+
+def _inp(step=0.09, p=int(235e9 * 4 / 256), k=2, bw=6.25e9):
+    return TuneInputs(param_bytes_per_chip=p, replicas=k, step_time_s=step,
+                      link_bw=bw, grad_norm=1.0, param_norm=100.0, lr=3e-4)
+
+
+class TestByteAccountingUnified:
+    @pytest.mark.parametrize("compression", ["none", "int8", "int16"])
+    @pytest.mark.parametrize("overlap", ["none", "delayed", "chunked"])
+    def test_sync_bytes_and_tuner_agree(self, compression, overlap):
+        """collective_bytes_per_sync and sync_time_s·BW must agree for every
+        (compression × overlap) combination — both read costmodel."""
+        cfg = SyncConfig(strategy="periodic", period=8,
+                         compression=compression, overlap=overlap, chunks=4)
+        for k in (2, 4, 16):
+            p = 10_000_000
+            inp = _inp(p=p, k=k, bw=1e9)
+            from_tuner = sync_time_s(inp, cfg) * inp.link_bw
+            from_sync = S.collective_bytes_per_sync(p, k, cfg)
+            assert from_sync == pytest.approx(from_tuner, rel=1e-9, abs=1.0)
+            assert from_sync == pytest.approx(
+                wire_bytes_per_sync(p, k, cfg), rel=1e-9, abs=1.0)
+
+    def test_chunked_divides_wire_bytes(self):
+        p, k = 8_000_000, 4
+        base = S.collective_bytes_per_sync(p, k, SyncConfig())
+        quarter = S.collective_bytes_per_sync(
+            p, k, SyncConfig(overlap="chunked", chunks=4))
+        assert quarter == pytest.approx(base / 4, rel=1e-6)
+
+    def test_delayed_same_wire_bytes(self):
+        p, k = 8_000_000, 4
+        assert (S.collective_bytes_per_sync(p, k, SyncConfig()) ==
+                S.collective_bytes_per_sync(
+                    p, k, SyncConfig(overlap="delayed")))
+
+
+class TestOverlapCostModel:
+    def test_delayed_step_time_is_max_form(self):
+        cfg = SyncConfig(overlap="delayed")
+        inp = _inp()
+        t_sync = sync_time_s(inp, cfg)
+        for h in (1, 4, 64, 1024):
+            assert predicted_step_time(inp, cfg, h) == pytest.approx(
+                max(inp.step_time_s, t_sync / h))
+
+    def test_overlapped_step_time_never_worse(self):
+        inp = _inp()
+        for h in (1, 2, 8, 64, 512):
+            t_block = predicted_step_time(inp, SyncConfig(), h)
+            t_delay = predicted_step_time(
+                inp, SyncConfig(overlap="delayed"), h)
+            t_chunk = predicted_step_time(
+                inp, SyncConfig(overlap="chunked", chunks=4), h)
+            assert t_delay <= t_block
+            assert t_chunk <= t_block
+
+    def test_choose_period_delayed_le_blocking(self):
+        """Acceptance: delayed H ≤ blocking H for the same TuneInputs."""
+        for k in (2, 4):
+            for target in (0.01, 0.05, 0.2):
+                inp = _inp(k=k)
+                hb = choose_period(inp, target_overhead=target, max_drift=1.0)
+                hd = choose_period(inp, target_overhead=target, max_drift=1.0,
+                                   overlap="delayed")
+                assert hd <= hb, (hd, hb, target)
+                assert hd >= 1
+
+    def test_choose_period_delayed_meets_exposed_target(self):
+        inp = _inp()
+        cfg = SyncConfig(strategy="hierarchical", overlap="delayed")
+        h = choose_period(inp, cfg, target_overhead=0.05, max_drift=1.0)
+        exposed = max(0.0, sync_time_s(inp, cfg) / h - inp.step_time_s)
+        assert exposed / inp.step_time_s <= 0.05 + 1e-9
+        if h > 1:
+            exposed_prev = max(0.0,
+                               sync_time_s(inp, cfg) / (h - 1) - inp.step_time_s)
+            assert exposed_prev / inp.step_time_s > 0.05
+
+    def test_chunked_drift_cap_scales_with_chunks(self):
+        """Each leaf averages every chunks·H steps, so the drift cap must
+        bind H at drift_cap/chunks — not the raw blocking cap."""
+        from repro.core.autotune import drift_cap
+        inp = TuneInputs(param_bytes_per_chip=10**12, replicas=2,
+                         step_time_s=1e-4, link_bw=6.25e9,
+                         grad_norm=1.0, param_norm=100.0, lr=1e-3)
+        cap = drift_cap(inp, 0.01)
+        cfg = SyncConfig(overlap="chunked", chunks=4)
+        h = choose_period(inp, cfg, target_overhead=0.05, max_drift=0.01)
+        assert cap > 4  # comm pressure is huge, so the cap binds
+        assert h == max(1, cap // 4), (h, cap)
+
+    def test_report_overhead_consistent_with_step_time(self):
+        from repro.core.autotune import report
+        inp = _inp()
+        rep = report(inp, SyncConfig(strategy="hierarchical",
+                                     overlap="delayed"))
+        for h, row in rep["ladder"].items():
+            want = (row["step_s"] - inp.step_time_s) / inp.step_time_s
+            assert row["overhead"] == pytest.approx(want)
+            assert row["overhead"] >= 0.0
+
+    def test_overlapped_step_time_matches_costmodel(self):
+        cfg = SyncConfig(overlap="delayed")
+        inp = _inp()
+        assert predicted_step_time(inp, cfg, 16) == overlapped_step_time(
+            inp.step_time_s, sync_time_s(inp, cfg), 16, cfg)

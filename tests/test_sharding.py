@@ -1,7 +1,10 @@
 """Logical-axis sharding rules: divisibility fallback, axis dedup, remap."""
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dev dep: property tests skip
+    from conftest import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.config import MeshConfig
