@@ -137,6 +137,19 @@ class SyncConfig:
                         and sync one shard per block: each leaf syncs every
                         ``chunks·period`` steps and per-sync wire bytes shrink
                         ``chunks``×.
+
+    ``topology`` — which replicas a sync point couples:
+      * ``"all"``      — global collective (pmean/psum/all-gather); one
+                         straggler stalls every replica.
+      * ``"ring"``     — each replica averages with its two ``ppermute``
+                         neighbors (mixing weight 1/3 each); O(1) neighbor
+                         bytes per sync, no global barrier.
+      * ``"pairwise"`` — rotating disjoint pairs (odd–even pairing by sync
+                         round) average with weight 1/2; needs an even
+                         replica count. Gossip reaches consensus only
+                         geometrically (factor λ₂ per round — see
+                         :func:`repro.core.costmodel.gossip_lambda2`), so the
+                         auto-tuner caps H tighter for sparse topologies.
     """
 
     strategy: str = "sync_every_step"
@@ -148,10 +161,13 @@ class SyncConfig:
     eval_at_sync: bool = False     # paper's per-sync CV-accuracy computation
     overlap: str = "none"          # none | delayed | chunked
     chunks: int = 4                # R — shard count for overlap="chunked"
+    topology: str = "all"          # all | ring | pairwise (gossip)
 
     @property
     def msf_label(self) -> str:
         tail = "" if self.overlap == "none" else f",overlap={self.overlap}"
+        if self.topology != "all":
+            tail += f",topo={self.topology}"
         return f"{self.strategy}(H={self.period},comp={self.compression}{tail})"
 
 

@@ -14,3 +14,7 @@ from repro.configs import (  # noqa: F401
     zamba2_1p2b,
 )
 from repro.configs import svm_datasets  # noqa: F401
+from repro.configs.sync_presets import (  # noqa: F401
+    SYNC_PRESETS,
+    get_sync_preset,
+)

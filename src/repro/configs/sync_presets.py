@@ -1,0 +1,46 @@
+"""Named model-synchronization schedules (the sync analog of ``--arch``).
+
+One place that pins the combinations the experiments sweep, so launch
+scripts and benchmarks reference a preset id instead of re-assembling
+``SyncConfig`` fields. ``--set sync.topology=ring``-style dotted overrides
+still compose on top.
+
+The gossip presets pair a sparse topology with ``overlap="delayed"`` by
+default: gossip already removed the global barrier, delayed overlap
+additionally takes the two ppermutes off the block's critical path — the
+full straggler-decoupled schedule the ROADMAP's gossip item asks for.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.config.base import SyncConfig
+
+SYNC_PRESETS: Dict[str, SyncConfig] = {
+    # the paper's DMS: blocking global average every H steps
+    "paper_blocking": SyncConfig(strategy="periodic", period=64),
+    # PR 1's overlap engine on the global collective
+    "overlap_delayed": SyncConfig(strategy="periodic", period=64,
+                                  overlap="delayed"),
+    # gossip: no global barrier at all (ISSUE 2 tentpole)
+    "gossip_ring": SyncConfig(strategy="periodic", period=64,
+                              topology="ring", overlap="delayed"),
+    "gossip_pairwise": SyncConfig(strategy="periodic", period=64,
+                                  topology="pairwise", overlap="delayed"),
+    # gossip + compressed point-to-point wire (int16 needs no psum headroom
+    # on the neighbor exchange — full range per sender)
+    "gossip_ring_int16": SyncConfig(strategy="periodic", period=64,
+                                    topology="ring", overlap="delayed",
+                                    compression="int16"),
+    # hierarchical flavor: every-step data-axis sync, gossip across pods
+    "hierarchical_gossip_ring": SyncConfig(strategy="hierarchical",
+                                           period=64, topology="ring",
+                                           overlap="delayed"),
+}
+
+
+def get_sync_preset(name: str) -> SyncConfig:
+    if name not in SYNC_PRESETS:
+        raise KeyError(
+            f"unknown sync preset {name!r}; known: {sorted(SYNC_PRESETS)}")
+    return SYNC_PRESETS[name]

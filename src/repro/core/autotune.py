@@ -32,6 +32,10 @@ drift* per block small relative to the parameter scale. We expose this as
 (η·E[‖g‖]·H, callers pass measured grad/param norms) stays below
 ``max_drift`` × ‖w‖. With the default 1% drift cap, the paper's own
 regime (its largest explored blocks) is comfortably inside the envelope.
+Gossip topologies (``SyncConfig.topology`` ∈ {ring, pairwise}) mix only a
+factor ``1 − λ₂`` per round (Stich 2018's inexact-averaging regime), so the
+cap additionally shrinks by the topology's spectral gap — sparser mixing ⇒
+more frequent sync at the same drift budget.
 
 ``choose_period`` returns the smallest H whose *remaining* sync overhead
 is below ``target_overhead`` of the step time, clipped to the drift cap —
@@ -112,6 +116,14 @@ def choose_period(inp: TuneInputs, cfg: Optional[SyncConfig] = None, *,
         # each leaf only averages every chunks·H steps, so the *effective*
         # averaging period is chunks×H — the drift cap binds H accordingly
         cap = max(1, cap // max(1, cfg.chunks))
+    if cfg.topology != "all":
+        # gossip convergence guardrail: one round contracts the replica
+        # disagreement only by λ₂ (vs 0 for a global average), so reaching
+        # the same consensus takes ~1/(1−λ₂) rounds — the effective
+        # averaging period is H/(1−λ₂) and the drift cap must bind H at
+        # gap·cap. The gossip analog of the chunked ``cap // chunks``.
+        gap = costmodel.spectral_gap(max(2, inp.replicas), cfg.topology)
+        cap = max(1, int(cap * gap))
     h = max(1, min(h_comm, cap))
     return h
 

@@ -27,6 +27,10 @@ Two compiled step flavors, selected by ``SyncConfig.strategy``:
   replicas are *not* byte-identical right after a block — they converge to
   anchor + own last block's drift (delayed) or per-leaf staleness ≤
   ``chunks`` blocks (chunked); see :mod:`repro.core.sync`.
+  ``SyncConfig.topology`` ∈ {ring, pairwise} swaps the block's global
+  collective for ``ppermute`` neighbor mixing (gossip) — no global barrier,
+  replicas stay within the geometric consensus envelope and
+  :func:`finalize_state` collapses them via the (invariant) replica mean.
 
 State layout (plain dict → trivially checkpointable):
 
@@ -198,18 +202,22 @@ def make_local_sgd_block(model, cfg: TrainConfig, mesh: Mesh,
                 # params. Under overlap the block-end params are still
                 # per-replica divergent, so reconstruct the synchronized
                 # model first: delayed has it as params+pending (identical
-                # on every replica); chunked needs a replica mean.
+                # on every replica under topology="all"); chunked and any
+                # gossip topology need a replica mean (gossip consensus is
+                # only geometric, but its replica mean is the invariant
+                # target of the doubly stochastic mixing).
                 eval_params = params
                 if cfg.sync.overlap == "delayed":
                     eval_params = jax.tree.map(
                         lambda p, q: (p.astype(jnp.float32) + q
                                       ).astype(p.dtype),
                         params, sync_state["pending"])
-                elif cfg.sync.overlap == "chunked":
+                if (cfg.sync.overlap == "chunked"
+                        or cfg.sync.topology != "all"):
                     eval_params = jax.tree.map(
                         lambda p: jax.lax.pmean(
                             p.astype(jnp.float32), replica_axis
-                        ).astype(p.dtype), params)
+                        ).astype(p.dtype), eval_params)
                 last_mb = jax.tree.map(lambda x: x[-1], batch)
                 eval_loss, _ = model.loss(eval_params, last_mb)
                 metrics["sync_eval_loss"] = jax.lax.pmean(
@@ -238,19 +246,23 @@ def make_local_sgd_block(model, cfg: TrainConfig, mesh: Mesh,
 def finalize_state(state, cfg: TrainConfig):
     """Make the trained state globally consistent before checkpoint/eval.
 
-    Under ``overlap="delayed"``/``"chunked"`` the replicas are intentionally
-    divergent between blocks (the last mean correction lives only in the
-    sync state); this collapses params to the fully synchronized model
-    (``sync.flush_overlap``) and clears the pending correction so training
-    can also resume cleanly from the flushed state. A no-op for
-    ``overlap="none"``.
+    Under ``overlap="delayed"``/``"chunked"`` — and any gossip topology,
+    whose replicas only ever reach geometric consensus — the replicas are
+    intentionally divergent between blocks; this collapses params to the
+    fully synchronized model (``sync.flush_overlap``) and clears the
+    pending correction *and* the error-feedback residual (flush folds the
+    EF into the params, so leaving it in the state would double-count it
+    on resume) so training can also resume cleanly from the flushed state.
+    A no-op for ``overlap="none"`` with ``topology="all"``.
     """
-    if cfg.sync.overlap == "none":
+    if cfg.sync.overlap == "none" and cfg.sync.topology == "all":
         return state
     new_sync = dict(state["sync"])
     if "pending" in new_sync:
         new_sync["pending"] = jax.tree.map(jnp.zeros_like,
                                            new_sync["pending"])
+    if "ef" in new_sync:
+        new_sync["ef"] = jax.tree.map(jnp.zeros_like, new_sync["ef"])
     return {**state,
             "params": S.flush_overlap(state["params"], state["sync"],
                                       cfg.sync),

@@ -40,6 +40,22 @@ Pallas kernel (:mod:`repro.kernels.hinge`).
   (zero-padded to equal length) and one segment is value-averaged per
   block, shrinking per-sync wire bytes ``chunks``× (each coordinate syncs
   every ``chunks`` blocks).
+
+``topology`` lifts the sync engine's gossip axis onto the same path:
+
+* ``"all"``      — the paper's global ``MPI_AllReduce`` (``lax.pmean``).
+* ``"ring"``     — each worker averages with its two ``lax.ppermute``
+  neighbors (``w ← (w + w_left + w_right)/3``): O(1) neighbor bytes per
+  sync independent of K, and no global barrier for a straggler to stall.
+* ``"pairwise"`` — rotating disjoint odd–even pairs average with weight ½
+  (round parity alternates the pairing); requires an even worker count.
+
+Gossip workers only reach consensus geometrically (factor λ₂ per round —
+:func:`repro.core.costmodel.gossip_lambda2`); the mixing matrix is doubly
+stochastic, so the worker mean is invariant and the final flush
+(``mean_K(w)``) returns the exact consensus target. The ``vmap`` backend
+simulates gossip with the same static mixing matrices the cost model
+analyzes; the ``shard_map`` backend emits real ``ppermute``s.
 """
 from __future__ import annotations
 
@@ -175,12 +191,16 @@ def _shard_data(x: np.ndarray, y: np.ndarray, k: int):
 
 @functools.partial(jax.jit,
                    static_argnames=("epochs", "block_size", "c", "grad_impl",
-                                    "overlap", "chunks"))
+                                    "overlap", "chunks", "topology"))
 def _dms_vmap(w0, xs, ys, *, epochs: int, block_size: int, c: float,
-              grad_impl: str, overlap: str = "none", chunks: int = 4):
+              grad_impl: str, overlap: str = "none", chunks: int = 4,
+              topology: str = "all"):
     """K simulated workers: xs (K, n_local, d). Every worker holds its own
     w between syncs; sync = mean over the worker dim after each block
-    (blocking), stale-by-one (delayed) or one w-segment per block (chunked)."""
+    (blocking), stale-by-one (delayed) or one w-segment per block (chunked).
+    ``topology != "all"`` replaces the worker mean with the static gossip
+    mixing matrix (``w ← M w``, M from costmodel.mixing_matrices — the same
+    matrices whose λ₂ the auto-tuner's guardrail reads)."""
     k, n_local, d = xs.shape
     nb = n_local // block_size
     xb = xs[:, : nb * block_size].reshape(k, nb, block_size, d)
@@ -188,6 +208,63 @@ def _dms_vmap(w0, xs, ys, *, epochs: int, block_size: int, c: float,
     # scan over blocks outside, vmap over workers inside
     xb = jnp.swapaxes(xb, 0, 1)   # (nb, K, bs, d)
     yb = jnp.swapaxes(yb, 0, 1)
+
+    if topology != "all":
+        from repro.core import costmodel
+        mats = [jnp.asarray(m, w0.dtype)
+                for m in costmodel.mixing_matrices(k, topology)]
+
+        def mix(w, rnd):
+            """w (K, cols) ← M_rnd w; rnd selects the pairwise parity."""
+            if len(mats) == 1:
+                return mats[0] @ w
+            return jax.lax.cond(rnd % 2 == 0, lambda v: mats[0] @ v,
+                                lambda v: mats[1] @ v, w)
+
+        dp = _padded_width(d, chunks) if overlap == "chunked" else d
+        seg = dp // chunks
+        delayed = overlap == "delayed"
+
+        def epoch(carry, t):
+            alpha = 1.0 / (1.0 + t.astype(w0.dtype))
+
+            def block(carry, xy):
+                # carry: (wk, pending, cnt) under delayed, (wk, cnt) else —
+                # the (K, dp) pending buffer only exists where it is read
+                wk, cnt = (carry[0], carry[-1])
+                xblk, yblk = xy
+                grads = jax.vmap(
+                    lambda ww, xw, yw: block_grad(ww[:d], xw, yw, c,
+                                                  grad_impl)
+                )(wk, xblk, yblk)
+                w_end = wk - alpha * (grads if dp == d else
+                                      jnp.pad(grads, ((0, 0), (0, dp - d))))
+                if overlap == "none":
+                    return (mix(w_end, cnt), cnt + 1), None
+                if delayed:
+                    # apply the previous boundary's gossip correction; this
+                    # boundary's mix feeds only the carried pending state
+                    g = mix(w_end, cnt) - w_end
+                    return (w_end + carry[1], g, cnt + 1), None
+                rows = jax.lax.dynamic_slice(
+                    w_end, (0, (cnt % chunks) * seg), (k, seg))
+                mrow = mix(rows, cnt // chunks)
+                w_new = jax.lax.dynamic_update_slice(
+                    w_end, mrow, (0, (cnt % chunks) * seg))
+                return (w_new, cnt + 1), None
+
+            carry, _ = jax.lax.scan(block, carry, (xb, yb))
+            return carry, None
+
+        wk0 = jnp.zeros((k, dp), w0.dtype).at[:, :d].set(
+            jnp.broadcast_to(w0, (k, d)))
+        cnt0 = jnp.zeros((), jnp.int32)
+        carry0 = ((wk0, jnp.zeros((k, dp), w0.dtype), cnt0) if delayed
+                  else (wk0, cnt0))
+        carry, _ = jax.lax.scan(epoch, carry0, jnp.arange(epochs))
+        # flush: the worker mean is invariant under doubly stochastic
+        # mixing — the exact consensus target
+        return jnp.mean(carry[0], axis=0)[:d]
 
     if overlap == "none":
         def epoch(w, t):
@@ -261,7 +338,7 @@ def _dms_vmap(w0, xs, ys, *, epochs: int, block_size: int, c: float,
 
 
 def _make_worker_block(axis: str, *, c: float, grad_impl: str, overlap: str,
-                       chunks: int, d: int):
+                       chunks: int, d: int, topology: str = "all"):
     """One worker's block (compute + boundary sync), inside shard_map with
     ``axis`` manual. ``carry`` is a dict per overlap mode:
 
@@ -269,23 +346,49 @@ def _make_worker_block(axis: str, *, c: float, grad_impl: str, overlap: str,
         delayed: {"w": (d,), "pending": (d,)}   — pending = meanΔ − ownΔ
         chunked: {"w": (dp,), "cnt": i32}       — dp = d padded to chunks·seg
 
+    ``topology != "all"`` swaps every ``pmean`` for a ``ppermute`` neighbor
+    mix (:func:`repro.core.sync.gossip_mix`); ``"pairwise"`` adds a ``cnt``
+    round counter to the none/delayed carries for the pairing parity, and
+    the delayed pending becomes ``mix(w_end) − w_end`` (value-form gossip —
+    workers never share an anchor, so a delta-only exchange would let the
+    anchors drift apart unboundedly).
+
     Under ``delayed`` the returned ``w`` depends only on the *previous*
-    boundary's mean (the pending correction); this boundary's ``pmean``
-    output feeds only ``pending``, so the collective is not on this or the
-    next block's compute critical path.
+    boundary's correction; this boundary's collective output feeds only
+    ``pending``, so it is not on this or the next block's compute critical
+    path.
     """
+    from repro.core import sync as _sync
+    gossip = topology != "all"
+
+    def exchange(v, cnt):
+        """Boundary exchange: global mean, or topology neighbor mix."""
+        if gossip:
+            return _sync.gossip_mix(v, axis, topology, round_idx=cnt)
+        return jax.lax.pmean(v, axis)
+
+    def bump(out, carry):
+        if gossip and topology == "pairwise" and overlap != "chunked":
+            out["cnt"] = carry["cnt"] + 1
+        return out
+
     def block(carry, xblk, yblk, alpha):
+        cnt = carry.get("cnt")
         if overlap == "none":
             w = carry["w"]
             w_local = w - alpha * block_grad(w, xblk, yblk, c, grad_impl)
-            return {"w": jax.lax.pmean(w_local, axis)}
+            return bump({"w": exchange(w_local, cnt)}, carry)
         if overlap == "delayed":
             w = carry["w"]
             delta = -alpha * block_grad(w, xblk, yblk, c, grad_impl)
-            mean = jax.lax.pmean(delta, axis)        # overlappable collective
-            return {"w": w + delta + carry["pending"],
-                    "pending": mean - delta}
-        # chunked: one w-segment value-averaged per block
+            w_end = w + delta
+            if gossip:
+                pending = exchange(w_end, cnt) - w_end   # overlappable
+            else:
+                pending = jax.lax.pmean(delta, axis) - delta
+            return bump({"w": w_end + carry["pending"],
+                         "pending": pending}, carry)
+        # chunked: one w-segment value-exchanged per block
         w = carry["w"]                               # (dp,)
         dp = w.shape[0]
         seg = dp // chunks
@@ -293,38 +396,53 @@ def _make_worker_block(axis: str, *, c: float, grad_impl: str, overlap: str,
         w_end = w - alpha * jnp.pad(g, (0, dp - d))
         idx = carry["cnt"] % chunks
         row = jax.lax.dynamic_slice(w_end, (idx * seg,), (seg,))
-        row = jax.lax.pmean(row, axis)               # 1/chunks of the bytes
+        row = exchange(row, carry["cnt"] // chunks)  # 1/chunks of the bytes
         w_new = jax.lax.dynamic_update_slice(w_end, row, (idx * seg,))
         return {"w": w_new, "cnt": carry["cnt"] + 1}
     return block
 
 
-def _carry_init(w0, *, overlap: str, chunks: int):
+def _needs_round(overlap: str, topology: str) -> bool:
+    """Pairwise none/delayed carries a round counter for the pairing parity
+    (chunked reuses its own cnt)."""
+    return topology == "pairwise" and overlap != "chunked"
+
+
+def _carry_init(w0, *, overlap: str, chunks: int, topology: str = "all"):
     """Initial per-worker carry (local, no leading worker dim)."""
     d = w0.shape[0]
     if overlap == "none":
-        return {"w": w0}
-    if overlap == "delayed":
-        return {"w": w0, "pending": jnp.zeros((d,), w0.dtype)}
-    dp = _padded_width(d, chunks)
-    return {"w": jnp.zeros((dp,), w0.dtype).at[:d].set(w0),
-            "cnt": jnp.zeros((), jnp.int32)}
+        carry = {"w": w0}
+    elif overlap == "delayed":
+        carry = {"w": w0, "pending": jnp.zeros((d,), w0.dtype)}
+    else:
+        dp = _padded_width(d, chunks)
+        carry = {"w": jnp.zeros((dp,), w0.dtype).at[:d].set(w0),
+                 "cnt": jnp.zeros((), jnp.int32)}
+    if _needs_round(overlap, topology):
+        carry["cnt"] = jnp.zeros((), jnp.int32)
+    return carry
 
 
-def _carry_flush(carry, axis: str, *, overlap: str, d: int):
+def _carry_flush(carry, axis: str, *, overlap: str, d: int,
+                 topology: str = "all"):
     """Collapse a worker's carry to the fully synchronized model."""
-    if overlap == "none":
+    if overlap == "none" and topology == "all":
         return carry["w"]
-    if overlap == "delayed":
-        # workers sit at anchor + ownΔ_last; their mean = anchor + meanΔ_last
+    if overlap in ("none", "delayed"):
+        # workers sit within one block's drift (delayed) or the gossip
+        # consensus envelope; their mean is the synchronized model (the
+        # mean is invariant under the doubly stochastic gossip mix)
         return jax.lax.pmean(carry["w"], axis)
     return jax.lax.pmean(carry["w"], axis)[:d]
 
 
 def _dms_shard_map(w0, xs, ys, *, epochs: int, block_size: int, c: float,
                    grad_impl: str, mesh, axis: str = "data",
-                   overlap: str = "none", chunks: int = 4):
-    """Real collectives: workers = mesh axis shards; sync = lax.pmean."""
+                   overlap: str = "none", chunks: int = 4,
+                   topology: str = "all"):
+    """Real collectives: workers = mesh axis shards; sync = lax.pmean
+    (``topology="all"``) or lax.ppermute neighbor mixing (gossip)."""
     k = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     assert xs.shape[0] == k, (xs.shape, k)
     d = w0.shape[0]
@@ -337,7 +455,8 @@ def _dms_shard_map(w0, xs, ys, *, epochs: int, block_size: int, c: float,
         xb = x_local[: nb * block_size].reshape(nb, block_size, d)
         yb = y_local[: nb * block_size].reshape(nb, block_size)
         blockfn = _make_worker_block(axis, c=c, grad_impl=grad_impl,
-                                     overlap=overlap, chunks=chunks, d=d)
+                                     overlap=overlap, chunks=chunks, d=d,
+                                     topology=topology)
 
         def epoch(carry, t):
             alpha = 1.0 / (1.0 + t.astype(w.dtype))
@@ -347,9 +466,11 @@ def _dms_shard_map(w0, xs, ys, *, epochs: int, block_size: int, c: float,
             return carry, None
 
         carry, _ = jax.lax.scan(epoch, _carry_init(w, overlap=overlap,
-                                                   chunks=chunks),
+                                                   chunks=chunks,
+                                                   topology=topology),
                                 jnp.arange(epochs))
-        return _carry_flush(carry, axis, overlap=overlap, d=d)
+        return _carry_flush(carry, axis, overlap=overlap, d=d,
+                            topology=topology)
 
     fn = jax.shard_map(worker, mesh=mesh,
                        in_specs=(P(), P(axis), P(axis)), out_specs=P(),
@@ -361,22 +482,24 @@ def dms(w0: jax.Array, x: np.ndarray, y: np.ndarray, *, workers: int,
         epochs: int, block_size: int, c: float = 1.0,
         grad_impl: str = "jnp", backend: str = "vmap",
         mesh=None, axis: str = "data", overlap: str = "none",
-        chunks: int = 4) -> jax.Array:
+        chunks: int = 4, topology: str = "all") -> jax.Array:
     """Algorithm 3 entry point. ``block_size`` is points per worker per sync
     (the paper's MSF knob: larger block ⇒ lower sync frequency);
     ``overlap`` ∈ {"none", "delayed", "chunked"} selects how the residual
-    sync is taken off the critical path (module docstring)."""
+    sync is taken off the critical path and ``topology`` ∈ {"all", "ring",
+    "pairwise"} which workers it couples (module docstring)."""
     xs, ys = _shard_data(np.asarray(x), np.asarray(y), workers)
     xs, ys = jnp.asarray(xs), jnp.asarray(ys)
     if backend == "vmap":
         return _dms_vmap(w0, xs, ys, epochs=epochs, block_size=block_size,
                          c=c, grad_impl=grad_impl, overlap=overlap,
-                         chunks=chunks)
+                         chunks=chunks, topology=topology)
     if backend == "shard_map":
         assert mesh is not None
         return _dms_shard_map(w0, xs, ys, epochs=epochs, block_size=block_size,
                               c=c, grad_impl=grad_impl, mesh=mesh, axis=axis,
-                              overlap=overlap, chunks=chunks)
+                              overlap=overlap, chunks=chunks,
+                              topology=topology)
     raise ValueError(backend)
 
 
@@ -386,7 +509,7 @@ def dms(w0: jax.Array, x: np.ndarray, y: np.ndarray, *, workers: int,
 
 def dms_timed_steps(mesh, axis: str, *, block_size: int, c: float = 1.0,
                     grad_impl: str = "jnp", overlap: str = "none",
-                    chunks: int = 4):
+                    chunks: int = 4, topology: str = "all"):
     """Returns (compute_step, sync_step) jitted separately so benchmarks can
     time computation vs communication — the paper's Figs 10–12 methodology
     (they instrument around MPI_AllReduce the same way).
@@ -399,14 +522,25 @@ def dms_timed_steps(mesh, axis: str, *, block_size: int, c: float = 1.0,
                      → (w_new_locals, new_pending)        (stale-by-one)
         chunked: sync(w_end_locals, cnt) → w_new_locals   (one segment;
                  d must be divisible by ``chunks``; caller increments cnt)
+
+    ``topology != "all"`` (supported for ``overlap="none"``) swaps the
+    blocking pmean for the gossip neighbor mix; models stay per-worker:
+
+        gossip:  sync(w_locals, cnt) → w_new_locals       (ppermute mix)
     """
+    gossip = topology != "all"
+    if gossip and overlap != "none":
+        raise ValueError("dms_timed_steps times gossip only for "
+                         "overlap='none' (use dms_block_stepper otherwise)")
 
     def compute(w, xb, yb, alpha):
         # per-worker block update, NO sync. xb: (K, bs, d) sharded over axis.
-        # w: replicated (d,) for overlap="none", per-worker (K, d) otherwise.
-        w_spec = P() if overlap == "none" else P(axis)
+        # w: replicated (d,) for blocking topology="all", per-worker (K, d)
+        # otherwise (gossip never re-replicates the model).
+        replicated_w = overlap == "none" and not gossip
+        w_spec = P() if replicated_w else P(axis)
         def worker(w, xw, yw):
-            wl = w if overlap == "none" else w[0]
+            wl = w if replicated_w else w[0]
             g = block_grad(wl, xw[0], yw[0], c, grad_impl)
             return (wl - alpha * g)[None]   # (1, d) → (K, d) globally
         f = jax.shard_map(worker, mesh=mesh,
@@ -415,7 +549,18 @@ def dms_timed_steps(mesh, axis: str, *, block_size: int, c: float = 1.0,
                           axis_names={axis}, check_vma=False)
         return f(w, xb, yb)
 
-    if overlap == "none":
+    if gossip:
+        from repro.core import sync as _sync
+
+        def sync(w_locals, cnt):
+            def worker(wl, cnt):
+                return _sync.gossip_mix(wl[0], axis, topology,
+                                        round_idx=cnt)[None]
+            f = jax.shard_map(worker, mesh=mesh, in_specs=(P(axis), P()),
+                              out_specs=P(axis), axis_names={axis},
+                              check_vma=False)
+            return f(w_locals, cnt)
+    elif overlap == "none":
         def sync(w_locals):
             def worker(wl):
                 return jax.lax.pmean(wl[0], axis)
@@ -461,24 +606,28 @@ def dms_timed_steps(mesh, axis: str, *, block_size: int, c: float = 1.0,
 # ---------------------------------------------------------------------------
 
 def dms_stepper_init(w0: jax.Array, workers: int, *, overlap: str = "none",
-                     chunks: int = 4):
+                     chunks: int = 4, topology: str = "all"):
     """Global (stacked) initial carry for :func:`dms_block_stepper`."""
     d = w0.shape[0]
     wk = jnp.broadcast_to(w0, (workers, d))
     if overlap == "none":
-        return {"w": wk}
-    if overlap == "delayed":
-        return {"w": wk, "pending": jnp.zeros((workers, d), w0.dtype)}
-    if overlap == "chunked":
+        carry = {"w": wk}
+    elif overlap == "delayed":
+        carry = {"w": wk, "pending": jnp.zeros((workers, d), w0.dtype)}
+    elif overlap == "chunked":
         dp = _padded_width(d, chunks)
         wp = jnp.zeros((workers, dp), w0.dtype).at[:, :d].set(wk)
-        return {"w": wp, "cnt": jnp.zeros((), jnp.int32)}
-    raise ValueError(f"unknown overlap mode: {overlap!r}")
+        carry = {"w": wp, "cnt": jnp.zeros((), jnp.int32)}
+    else:
+        raise ValueError(f"unknown overlap mode: {overlap!r}")
+    if _needs_round(overlap, topology):
+        carry["cnt"] = jnp.zeros((), jnp.int32)
+    return carry
 
 
 def dms_block_stepper(mesh, axis: str, *, d: int, c: float = 1.0,
                       grad_impl: str = "jnp", overlap: str = "none",
-                      chunks: int = 4):
+                      chunks: int = 4, topology: str = "all"):
     """One DMS block (compute + boundary sync) as a jittable step:
 
         step(carry, xblk, yblk, alpha) → carry
@@ -487,14 +636,17 @@ def dms_block_stepper(mesh, axis: str, *, d: int, c: float = 1.0,
     worker dim sharded over ``axis``; ``cnt`` is replicated) and ``xblk``
     (K, bs, d) / ``yblk`` (K, bs) sharded over ``axis``. Not jitted — wrap
     in ``jax.jit``/``lax.scan`` for timing, or ``jax.make_jaxpr`` to verify
-    the overlap property (delayed: no dot depends on the block's pmean).
+    the overlap property (delayed: no dot depends on the block's pmean) or
+    the gossip property (ring/pairwise: ppermutes only, no global
+    collective).
     """
     blockfn = _make_worker_block(axis, c=c, grad_impl=grad_impl,
-                                 overlap=overlap, chunks=chunks, d=d)
+                                 overlap=overlap, chunks=chunks, d=d,
+                                 topology=topology)
     cspec = {"w": P(axis)}
     if overlap == "delayed":
         cspec["pending"] = P(axis)
-    if overlap == "chunked":
+    if overlap == "chunked" or _needs_round(overlap, topology):
         cspec["cnt"] = P()
 
     def step(carry, xblk, yblk, alpha):

@@ -41,6 +41,31 @@ chunked            partial: the parameter tree is split into ``cfg.chunks``
                    ``chunks``×
 =================  ==========================================================
 
+=================  ==========================================================
+``topology``       which replicas one sync couples (composes with overlap)
+=================  ==========================================================
+all                global collective (``pmean``/``psum``/all-gather): exact
+                   consensus per sync, but one straggler stalls all K
+ring               gossip: two ``lax.ppermute`` neighbor exchanges,
+                   ``w ← (w + w_left + w_right)/3``. O(1) neighbor bytes
+                   per sync (independent of K), no global barrier;
+                   disagreement contracts by λ₂(ring, K) per round
+pairwise           gossip: rotating disjoint odd–even pairs average with
+                   weight ½ (round parity alternates the pairing so the
+                   whole ring mixes). Even replica count required; one
+                   partner's bytes per sync
+=================  ==========================================================
+
+Gossip sync points exchange parameter *values*, not deltas: mixing is a
+doubly stochastic contraction, so per-replica anchors cannot drift apart
+and the replica mean is invariant — ``flush_overlap``'s replica average is
+the exact consensus target. ``overlap="delayed"`` composes by carrying the
+gossip correction ``mix(w) − w`` one block stale (the ppermute feeds only
+the carried state, never this block's compute); ``"chunked"`` gossips one
+byte-balanced shard per boundary. Compression composes point-to-point: the
+wire carries the quantized payload plus a per-sender scale (no shared-scale
+``pmax``, and no psum headroom — the full int range is usable).
+
 Optional modifiers (beyond-paper, composable):
 
 * ``compression="int8"`` — error-feedback int8 delta exchange
@@ -74,9 +99,14 @@ def needs_replica_axis(cfg: SyncConfig) -> bool:
 def validate(cfg: SyncConfig) -> None:
     if cfg.overlap not in ("none", "delayed", "chunked"):
         raise ValueError(f"unknown overlap mode: {cfg.overlap!r}")
+    if cfg.topology not in ("all", "ring", "pairwise"):
+        raise ValueError(f"unknown sync topology: {cfg.topology!r}")
     if cfg.overlap == "chunked" and cfg.slowmo > 0.0:
         raise ValueError("slowmo requires a whole-tree sync delta; "
                          "overlap='chunked' averages one shard at a time")
+    if cfg.topology != "all" and cfg.slowmo > 0.0:
+        raise ValueError("slowmo steps on the globally averaged delta; "
+                         "gossip topologies never materialize a global mean")
     if cfg.overlap == "chunked" and cfg.chunks < 1:
         raise ValueError(f"chunks must be >= 1, got {cfg.chunks}")
 
@@ -96,6 +126,10 @@ def init_sync_state(cfg: SyncConfig, params) -> Dict[str, Any]:
         state["pending"] = zeros()
     if cfg.overlap == "chunked":
         state["chunk_idx"] = jnp.zeros((), jnp.int32)
+    if cfg.topology == "pairwise" and cfg.overlap != "chunked":
+        # round parity selects the odd/even pairing (chunked derives the
+        # round from chunk_idx instead — one counter per concern)
+        state["gossip_round"] = jnp.zeros((), jnp.int32)
     return state
 
 
@@ -110,6 +144,8 @@ def sync_state_axes(cfg: SyncConfig, param_axes) -> Dict[str, Any]:
         state["pending"] = param_axes
     if cfg.overlap == "chunked":
         state["chunk_idx"] = ()
+    if cfg.topology == "pairwise" and cfg.overlap != "chunked":
+        state["gossip_round"] = ()
     return state
 
 
@@ -117,13 +153,124 @@ def sync_state_axes(cfg: SyncConfig, param_axes) -> Dict[str, Any]:
 # the mean-exchange primitive (shared by every overlap mode)
 # ---------------------------------------------------------------------------
 
-def _exchange_mean(values, ef, cfg: SyncConfig, axis: str, param_axes):
-    """Replica-mean of a pytree over ``axis`` under cfg.compression.
+def _gossip_perms(k: int, topology: str):
+    """Static ppermute (source → dest) lists, one list per wire exchange.
 
-    Returns ``(mean_tree, new_ef_tree_or_None)``. ``values`` may be deltas
-    (blocking/delayed) or raw parameter values (chunked); error feedback
-    carries the quantization residual either way.
+    ``ring`` returns both neighbor shifts; ``pairwise`` returns the two
+    alternating pairings (even rounds pair (0,1)(2,3)…, odd rounds
+    (1,2)(3,4)…(K−1,0)) — the caller selects by round parity.
     """
+    if topology == "ring":
+        return [[(i, (i + 1) % k) for i in range(k)],
+                [(i, (i - 1) % k) for i in range(k)]]
+    if topology == "pairwise":
+        if k % 2:
+            raise ValueError(
+                f"topology='pairwise' needs an even replica count, got {k}")
+        even = [(i, i ^ 1) for i in range(k)]
+        odd = [(i, (i - 1) % k if i % 2 == 0 else (i + 1) % k)
+               for i in range(k)]
+        return [even, odd]
+    raise ValueError(f"unknown gossip topology: {topology!r}")
+
+
+def _mix_with(self_val, send, k: int, topology: str, round_idx):
+    """Topology-weighted combine of own payload with the neighbors'.
+
+    ``send(perm)`` returns the ``ppermute``'d payload for one wire
+    exchange — the single definition of the gossip weighting (ring thirds,
+    pairwise halves with parity-``cond`` pairing) shared by the raw-value
+    and compressed paths.
+    """
+    if k == 1:
+        return self_val
+    perms = _gossip_perms(k, topology)
+    if topology == "ring":
+        return (self_val + send(perms[0]) + send(perms[1])) / 3.0
+    if round_idx is None:
+        # a frozen pairing would "converge" each disjoint pair to its own
+        # mean and never reach global consensus — refuse rather than mix
+        # wrongly (every engine path threads a counter: gossip_round, or
+        # chunk_idx // chunks under chunked)
+        raise ValueError("topology='pairwise' alternates its pairing by "
+                         "round; pass round_idx")
+    def pair(perm):
+        return lambda v: (v + send(perm)) / 2.0
+    return jax.lax.cond(round_idx % 2 == 0, pair(perms[0]), pair(perms[1]),
+                        self_val)
+
+
+def gossip_mix(x, axis: str, topology: str, round_idx=None):
+    """Mix one (uncompressed) array with its topology neighbors over
+    ``axis`` — the doubly stochastic gossip step ``x ← Σ_j M_ij x_j``.
+
+    Must run inside shard_map with ``axis`` manual. ``round_idx`` (traced
+    i32) selects the pairwise round parity — required for ``pairwise``,
+    ignored by ``ring``. The only collectives emitted are ``ppermute``s —
+    no global barrier.
+    """
+    k = jax.lax.psum(1, axis)      # static at trace time
+    return _mix_with(x, lambda perm: jax.lax.ppermute(x, axis, perm),
+                     k, topology, round_idx)
+
+
+def _gossip_exchange(values, ef, cfg: SyncConfig, axis: str, round_idx):
+    """Neighbor-mixed pytree under ``cfg.topology``/``cfg.compression``.
+
+    Returns ``(mixed_tree, new_ef_tree_or_None)`` like :func:`_exchange_mean`
+    but moves only point-to-point ``ppermute`` payloads — no global
+    collective. Compressed wires carry ``(q, per-sender scale)`` pairs and
+    every replica mixes its *own dequantized* payload (not the raw value),
+    so the mixing matrix stays doubly stochastic over what was actually
+    transmitted; the quantization residual goes to error feedback.
+    """
+    k = jax.lax.psum(1, axis)      # static at trace time
+
+    if cfg.compression in ("int8", "int16"):
+        qmax, qdtype = ((127, jnp.int8) if cfg.compression == "int8"
+                        else (32767, jnp.int16))
+
+        def leaf(v, e):
+            val = v.astype(jnp.float32) + e
+            amax = jnp.max(jnp.abs(val))
+            scale = jnp.maximum(amax, 1e-12) / qmax
+            q = jnp.clip(jnp.round(val / scale), -qmax, qmax).astype(qdtype)
+            deq_self = q.astype(jnp.float32) * scale
+
+            def send(perm):
+                qn = jax.lax.ppermute(q, axis, perm)
+                sn = jax.lax.ppermute(scale, axis, perm)
+                return qn.astype(jnp.float32) * sn
+
+            return (_mix_with(deq_self, send, k, cfg.topology, round_idx),
+                    val - deq_self)
+
+        out = jax.tree.map(leaf, values, ef)
+        is_t = lambda x: isinstance(x, tuple)
+        mixed = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+        new_ef = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+        return mixed, new_ef
+
+    def leaf(v):
+        return gossip_mix(v.astype(jnp.float32), axis, cfg.topology,
+                          round_idx)
+
+    return jax.tree.map(leaf, values), None
+
+
+def _exchange_mean(values, ef, cfg: SyncConfig, axis: str, param_axes,
+                   round_idx=None):
+    """Replica exchange of a pytree over ``axis`` under cfg.compression.
+
+    ``topology="all"`` returns the exact replica mean (global collective);
+    gossip topologies return the neighbor-mixed values (``round_idx``
+    selects the pairwise pairing). Returns ``(tree, new_ef_tree_or_None)``.
+    ``values`` may be deltas (blocking/delayed under "all") or raw parameter
+    values (chunked, and always under gossip); error feedback carries the
+    quantization residual either way.
+    """
+    if cfg.topology != "all":
+        return _gossip_exchange(values, ef, cfg, axis, round_idx)
     if cfg.compression == "int8":
         q, s, new_ef = C.compress_tree(values, ef)
         return C.allgather_mean_dequant(q, s, axis, param_axes), new_ef
@@ -133,17 +280,23 @@ def _exchange_mean(values, ef, cfg: SyncConfig, axis: str, param_axes):
         # sharding, where the int8 all-gather materializes full leaves
         # per device and a bf16 pmean trips XLA's AllReducePromotion
         # CHECK (§Perf C-cell log). A shared per-tensor scale is agreed
-        # via pmax first; 14-bit mantissa beats bf16's 8 at the same
-        # wire width. Rounding error is carried in the EF buffer.
+        # via pmax first; ⌊log₂(32767/K)⌋ mantissa bits still beat bf16's
+        # 8 at the same wire width for any realistic replica count.
+        # Rounding error is carried in the EF buffer.
+        k = jax.lax.psum(1, axis)          # static at trace time
+        # headroom scales with the replica count so the int16 psum cannot
+        # overflow: K·qmax ≤ 32767 (the old fixed ±8192 clip wrapped at
+        # world ≥ 4 — 4·8192 = 32768 > int16 max)
+        qmax = 32767 // k
+
         def int16_leaf(d, e):
             v = d + e
             amax = jax.lax.pmax(jnp.max(jnp.abs(v)), axis)
-            # headroom so K replicas sum within int16 range
-            scale = jnp.maximum(amax, 1e-12) / 8192.0
-            q = jnp.clip(jnp.round(v / scale), -8192, 8192
+            scale = jnp.maximum(amax, 1e-12) / qmax
+            q = jnp.clip(jnp.round(v / scale), -qmax, qmax
                          ).astype(jnp.int16)
             summed = jax.lax.psum(q, axis).astype(jnp.float32)
-            mean = summed * scale / jax.lax.psum(1, axis)
+            mean = summed * scale / k
             return mean, v - q.astype(jnp.float32) * scale
         out = jax.tree.map(int16_leaf, values, ef)
         is_t = lambda x: isinstance(x, tuple)
@@ -185,11 +338,13 @@ def sync_point(params_start, params_end, sync_state: Dict[str, Any],
     """One model synchronization, inside shard_map with ``axis`` manual.
 
     ``params_start`` — the params the block started from (identical across
-    replicas for ``overlap="none"``; per-replica under delayed/chunked);
-    ``params_end`` — this replica's drifted params.
+    replicas for ``overlap="none"``; per-replica under delayed/chunked and
+    any gossip topology); ``params_end`` — this replica's drifted params.
     ``param_axes`` — per-leaf logical axes (keeps the compressed-sync
     buffers sharded; see compression.allgather_mean_dequant).
     """
+    if cfg.topology != "all" and cfg.overlap != "chunked":
+        return _sync_point_gossip(params_end, sync_state, cfg, axis)
     if cfg.overlap == "delayed":
         return _sync_point_delayed(params_start, params_end, sync_state,
                                    cfg, axis, param_axes)
@@ -232,22 +387,59 @@ def _sync_point_delayed(params_start, params_end, sync_state, cfg, axis,
     return new_params, new_state
 
 
+def _sync_point_gossip(params_end, sync_state, cfg, axis):
+    """Gossip sync (ring/pairwise): mix parameter *values* with neighbors.
+
+    Value form (``w ← Σ_j M_ij w_j``, not a delta exchange) because gossip
+    never re-establishes a common anchor: a delta-only exchange would let
+    the per-replica anchors drift apart unboundedly, while value mixing
+    contracts the whole disagreement by λ₂ per round and keeps the replica
+    mean invariant (M is doubly stochastic).
+
+    ``overlap="none"`` applies the mixed values at this boundary (blocking
+    on two ppermutes — still no global barrier). ``overlap="delayed"``
+    carries the gossip correction ``mix(w) − w`` one block stale: this
+    boundary's ppermute output feeds only ``pending``, so the exchange is
+    free to run under the next block's compute.
+    """
+    new_state = dict(sync_state)
+    rnd = sync_state.get("gossip_round")
+    if rnd is not None:
+        new_state["gossip_round"] = rnd + 1
+    vals = jax.tree.map(lambda p: p.astype(jnp.float32), params_end)
+    mixed, new_ef = _gossip_exchange(vals, sync_state.get("ef"), cfg, axis,
+                                     rnd)
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    if cfg.overlap == "delayed":
+        new_params = _apply_f32(params_end, sync_state["pending"])
+        new_state["pending"] = jax.tree.map(lambda m, v: m - v, mixed, vals)
+        return new_params, new_state
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), mixed,
+                              params_end)
+    return new_params, new_state
+
+
 def chunk_assignment(leaves, chunks: int):
     """Leaf index → shard id, byte-balanced (greedy largest-first onto the
     lightest shard; ties broken by leaf order, so equal-size leaves land
-    round-robin). Balancing by *bytes* rather than leaf count is what makes
-    the cost model's per-sync ``/chunks`` wire accounting hold for skewed
-    trees — a leaf-count round-robin would let one shard carry the whole
-    embedding table. A single leaf larger than total/chunks still bounds
-    the worst boundary from below (no intra-leaf splitting here)."""
+    round-robin). Balancing by *bytes* — ``size · dtype.itemsize``, not
+    element count, so mixed-precision trees (bf16 params + fp32 buffers)
+    balance by what actually crosses the wire — is what makes the cost
+    model's per-sync ``/chunks`` accounting hold for skewed trees; a
+    leaf-count round-robin would let one shard carry the whole embedding
+    table. A single leaf larger than total/chunks still bounds the worst
+    boundary from below (no intra-leaf splitting here)."""
+    def nbytes(leaf):
+        return int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
     order = sorted(range(len(leaves)),
-                   key=lambda i: (-int(np.prod(leaves[i].shape)), i))
+                   key=lambda i: (-nbytes(leaves[i]), i))
     load = [0] * max(1, chunks)
     assign = [0] * len(leaves)
     for i in order:
         s = min(range(len(load)), key=lambda rr: (load[rr], rr))
         assign[i] = s
-        load[s] += int(np.prod(leaves[i].shape))
+        load[s] += nbytes(leaves[i])
     return assign
 
 
@@ -260,7 +452,11 @@ def _sync_point_chunked(params_end, sync_state, cfg, axis, param_axes):
     ``lax.switch`` keys the traced ``chunk_idx`` (replicated state, so every
     replica takes the same branch) into per-shard branches; only the taken
     branch's collective executes, so one boundary moves ~1/chunks of the
-    tree's bytes (shards are byte-balanced — see chunk_assignment).
+    tree's bytes (shards are byte-balanced — see chunk_assignment). Under a
+    gossip topology the shard is neighbor-mixed instead of globally
+    averaged; the pairwise round parity advances once per full round-robin
+    pass (``chunk_idx // chunks``) so each leaf alternates pairings across
+    its own syncs.
     """
     r = max(1, cfg.chunks)
     idx = sync_state["chunk_idx"]
@@ -283,7 +479,8 @@ def _sync_point_chunked(params_end, sync_state, cfg, axis, param_axes):
             vals = {i: leaves[i].astype(jnp.float32) for i in sub}
             efs = {i: ef_leaves[i] for i in sub} if have_ef else None
             axs = {i: ax_leaves[i] for i in sub}
-            mean, new_ef = _exchange_mean(vals, efs, cfg, axis, axs)
+            mean, new_ef = _exchange_mean(vals, efs, cfg, axis, axs,
+                                          round_idx=idx // r)
             new_leaves = list(leaves)
             new_ef_leaves = list(ef_leaves)
             for i in sub:
@@ -315,17 +512,29 @@ def flush_overlap(params, sync_state, cfg: SyncConfig, replica_dim: int = 0):
     ``anchor + stepΔ`` on every replica — the model with every sync applied,
     *including* the slowmo momentum term inside stepΔ (a bare replica mean
     would drop it). ``chunked`` replicas differ only by not-yet-synced drift
-    whose replica average is the consistent model. Call before
-    checkpointing/evaluating a state trained with ``overlap != "none"``
-    (see local_sgd.finalize_state). Returns the stacked layout with all
-    replicas equal.
+    whose replica average is the consistent model; gossip topologies leave
+    replicas within the geometric consensus envelope whose replica average
+    is the invariant mean (doubly stochastic mixing). When ``compression``
+    is on, the error-feedback residual — quantization error each replica
+    would have re-submitted at its next sync, where averaging would have
+    spread its replica mean to everyone — is folded in before the collapse,
+    so a checkpoint-resume from the flushed state neither loses nor
+    double-counts the carried error (``finalize_state`` zeroes the EF
+    buffer to match). Call before checkpointing/evaluating a state trained
+    with ``overlap != "none"`` or ``topology != "all"`` (see
+    local_sgd.finalize_state). Returns the stacked layout with all replicas
+    equal.
     """
-    if cfg.overlap == "none":
+    if cfg.overlap == "none" and cfg.topology == "all":
         return params
     if cfg.overlap == "delayed":
         params = jax.tree.map(
             lambda p, q: (p.astype(jnp.float32) + q).astype(p.dtype),
             params, sync_state["pending"])
+    if "ef" in sync_state:
+        params = jax.tree.map(
+            lambda p, e: (p.astype(jnp.float32) + e).astype(p.dtype),
+            params, sync_state["ef"])
 
     def leaf(p):
         m = jnp.mean(p.astype(jnp.float32), axis=replica_dim, keepdims=True)

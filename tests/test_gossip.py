@@ -1,0 +1,436 @@
+"""Gossip (ring/pairwise) sync: consensus, collectives, bytes, guardrail.
+
+ISSUE 2's contracts:
+
+* Gossip mixing is doubly stochastic: the replica mean is invariant and
+  the disagreement contracts within the spectral bound (ring: exactly λ₂
+  per round — the mixing matrix is symmetric, so the operator norm on the
+  mean-zero subspace IS λ₂).
+* ``topology="ring"``/``"pairwise"`` emit ``ppermute``s and NO global
+  collective (psum / all-gather / pmax) — verifiable from the jaxpr; under
+  ``overlap="delayed"`` no dot consumes the ppermute output either (the
+  gossip analog of the PR 1 overlap property).
+* The vmap simulation (static mixing matrices) and the shard_map backend
+  (real ppermutes) agree for every topology × overlap combination.
+* ``collective_bytes_per_sync``, ``costmodel.wire_bytes_per_sync`` and the
+  autotuner's ``sync_time_s`` agree under each topology; ring bytes are
+  O(1) in the replica count.
+* ``choose_period`` caps gossip H by the topology's spectral gap.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SyncConfig
+from repro.core import costmodel
+from repro.core import svm
+from repro.core import sync as S
+from repro.core.autotune import TuneInputs, choose_period, drift_cap, sync_time_s
+from conftest import run_with_devices
+
+
+# ---------------------------------------------------------------------------
+# mixing matrices and spectra
+# ---------------------------------------------------------------------------
+
+class TestMixingSpectra:
+    @pytest.mark.parametrize("topology", ["all", "ring", "pairwise"])
+    @pytest.mark.parametrize("k", [2, 4, 8, 16])
+    def test_matrices_doubly_stochastic(self, topology, k):
+        for m in costmodel.mixing_matrices(k, topology):
+            np.testing.assert_allclose(m.sum(0), 1.0, atol=1e-12)
+            np.testing.assert_allclose(m.sum(1), 1.0, atol=1e-12)
+            assert (m >= 0).all()
+
+    def test_lambda2_ring_matches_circulant_analytic(self):
+        """Ring eigenvalues are (1 + 2cos(2πm/K))/3 — λ₂ is the largest
+        modulus over m ≠ 0."""
+        for k in (2, 3, 4, 8, 16, 32):
+            want = max(abs(1 + 2 * np.cos(2 * np.pi * m / k)) / 3
+                       for m in range(1, k))
+            got = costmodel.gossip_lambda2(k, "ring")
+            assert got == pytest.approx(want, abs=1e-9), k
+
+    def test_lambda2_all_is_zero(self):
+        for k in (2, 8, 64):
+            assert costmodel.gossip_lambda2(k, "all") == 0.0
+            assert costmodel.spectral_gap(k, "all") == 1.0
+
+    def test_lambda2_pairwise_small_worlds_mix_exactly(self):
+        """K ≤ 4: the two alternating pairings reach exact consensus in one
+        schedule period, so the asymptotic per-round rate is 0."""
+        assert costmodel.gossip_lambda2(2, "pairwise") == pytest.approx(
+            0.0, abs=1e-6)
+        assert costmodel.gossip_lambda2(4, "pairwise") == pytest.approx(
+            0.0, abs=1e-6)
+        assert costmodel.gossip_lambda2(8, "pairwise") == pytest.approx(
+            np.sqrt(0.5), abs=1e-6)
+
+    def test_lambda2_grows_with_world(self):
+        """Sparser relative connectivity ⇒ slower mixing."""
+        lams = [costmodel.gossip_lambda2(k, "ring") for k in (4, 8, 16, 32)]
+        assert lams == sorted(lams)
+        assert all(0.0 <= l < 1.0 for l in lams)
+
+    def test_pairwise_odd_world_rejected(self):
+        with pytest.raises(ValueError):
+            costmodel.mixing_matrices(5, "pairwise")
+
+
+# ---------------------------------------------------------------------------
+# consensus semantics (real ppermutes, subprocess mesh)
+# ---------------------------------------------------------------------------
+
+class TestGossipConsensus:
+    def test_ring_contracts_within_spectral_bound_and_mean_invariant(self):
+        """With zero drift, repeated ring sync_points must (i) keep the
+        replica mean bit-stable, (ii) contract the disagreement by ≤ λ₂
+        per round, (iii) converge to the global mean."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import sync as S
+from repro.core import costmodel
+from repro.config import SyncConfig
+k, d, rounds = 8, 16, 12
+cfg = SyncConfig(strategy="periodic", topology="ring")
+mesh = jax.make_mesh((k,), ("pod",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+vals = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+
+def body(v):
+    p = {"w": v[0]}
+    st = S.init_sync_state(cfg, p)
+    outs = []
+    for _ in range(rounds):
+        p, st = S.sync_point(p, p, st, cfg, "pod")
+        outs.append(p["w"])
+    return jnp.stack(outs)[None]
+
+f = jax.shard_map(body, mesh=mesh, in_specs=(P("pod"),),
+                  out_specs=P("pod"), axis_names={"pod"}, check_vma=False)
+with jax.set_mesh(mesh):
+    out = np.asarray(jax.jit(f)(vals))       # (k, rounds, d)
+base = np.asarray(vals)
+mean = base.mean(0)
+lam2 = costmodel.gossip_lambda2(k, "ring")
+dis_prev = np.linalg.norm(base - mean)
+for r in range(rounds):
+    np.testing.assert_allclose(out[:, r].mean(0), mean, rtol=2e-5,
+                               atol=2e-6)   # mean invariant
+    dis = np.linalg.norm(out[:, r] - mean)
+    assert dis <= lam2 * dis_prev * 1.001 + 1e-6, (r, dis, dis_prev)
+    dis_prev = dis
+assert dis_prev <= (lam2 ** rounds) * np.linalg.norm(base - mean) * 1.01 \
+       + 1e-5
+print("OK")
+"""
+        assert "OK" in run_with_devices(code, n_devices=8)
+
+    def test_pairwise_contracts_within_product_operator_norm(self):
+        """Pairwise rounds alternate pairings; per schedule period (2
+        rounds) the worst-case contraction is ‖W_odd W_even − J‖₂."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import sync as S
+from repro.core import costmodel
+from repro.config import SyncConfig
+k, d, periods = 8, 16, 5
+cfg = SyncConfig(strategy="periodic", topology="pairwise")
+mesh = jax.make_mesh((k,), ("pod",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(1)
+vals = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+
+def body(v):
+    p = {"w": v[0]}
+    st = S.init_sync_state(cfg, p)
+    outs = []
+    for _ in range(2 * periods):
+        p, st = S.sync_point(p, p, st, cfg, "pod")
+        outs.append(p["w"])
+    return jnp.stack(outs)[None]
+
+f = jax.shard_map(body, mesh=mesh, in_specs=(P("pod"),),
+                  out_specs=P("pod"), axis_names={"pod"}, check_vma=False)
+with jax.set_mesh(mesh):
+    out = np.asarray(jax.jit(f)(vals))
+base = np.asarray(vals)
+mean = base.mean(0)
+we, wo = costmodel.mixing_matrices(k, "pairwise")
+opnorm = np.linalg.norm(wo @ we - np.full((k, k), 1.0 / k), 2)
+dis_prev = np.linalg.norm(base - mean)
+for r in range(periods):
+    dis = np.linalg.norm(out[:, 2 * r + 1] - mean)
+    assert dis <= opnorm * dis_prev * 1.001 + 1e-6, (r, dis, dis_prev)
+    dis_prev = dis
+np.testing.assert_allclose(out[:, -1].mean(0), mean, rtol=2e-5, atol=2e-6)
+print("OK")
+"""
+        assert "OK" in run_with_devices(code, n_devices=8)
+
+    def test_vmap_matches_shard_map_all_topologies_overlaps(self):
+        """Static-matrix simulation ≡ real ppermute collectives."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import svm
+from repro.launch.mesh import make_test_mesh
+rng = np.random.default_rng(0)
+x = rng.normal(size=(256, 12)).astype(np.float32)
+y = np.where(rng.random(256) > 0.5, 1.0, -1.0).astype(np.float32)
+w0 = jnp.zeros(12)
+mesh = make_test_mesh((8,), ("data",))
+for topo in ("ring", "pairwise"):
+    for ov in ("none", "delayed", "chunked"):
+        wv = svm.dms(w0, x, y, workers=8, epochs=3, block_size=4,
+                     overlap=ov, topology=topo)
+        with jax.set_mesh(mesh):
+            ws = svm.dms(w0, x, y, workers=8, epochs=3, block_size=4,
+                         backend="shard_map", mesh=mesh, overlap=ov,
+                         topology=topo)
+        np.testing.assert_allclose(np.asarray(wv), np.asarray(ws),
+                                   rtol=1e-5, atol=1e-6, err_msg=f"{topo}/{ov}")
+print("OK")
+"""
+        assert "OK" in run_with_devices(code, n_devices=8)
+
+    def test_gossip_compressed_sync_reaches_mean(self):
+        """int8/int16 gossip wires (per-sender scale, EF residual) still
+        drive the replicas to the global mean with zero drift."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import sync as S
+from repro.config import SyncConfig
+k, d = 4, 32
+mesh = jax.make_mesh((k,), ("pod",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+vals = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+for topo in ("ring", "pairwise"):
+    for comp, tol in (("int16", 1e-3), ("int8", 2e-2)):
+        cfg = SyncConfig(strategy="periodic", topology=topo,
+                         compression=comp)
+        def body(v):
+            p = {"w": v[0]}
+            st = S.init_sync_state(cfg, p)
+            for _ in range(16):
+                p, st = S.sync_point(p, p, st, cfg, "pod")
+            return p["w"][None]
+        f = jax.shard_map(body, mesh=mesh, in_specs=(P("pod"),),
+                          out_specs=P("pod"), axis_names={"pod"},
+                          check_vma=False)
+        with jax.set_mesh(mesh):
+            out = np.asarray(jax.jit(f)(vals))
+        mean = np.asarray(vals).mean(0)
+        err = np.abs(out - mean).max()
+        assert err < tol, (topo, comp, err)
+print("OK")
+"""
+        assert "OK" in run_with_devices(code, n_devices=4)
+
+    def test_ring_converges_on_ijcnn(self, ijcnn_small):
+        ds = ijcnn_small
+        for topo in ("ring", "pairwise"):
+            w = svm.dms(jnp.zeros(ds.features), ds.x_train, ds.y_train,
+                        workers=8, epochs=20, block_size=16, topology=topo)
+            acc = float(svm.accuracy(w, jnp.asarray(ds.x_cv),
+                                     jnp.asarray(ds.y_cv)))
+            assert acc > 0.75, (topo, acc)
+
+    def test_pairwise_odd_axis_rejected_at_trace(self):
+        with pytest.raises(ValueError):
+            jax.make_jaxpr(
+                lambda x: S.gossip_mix(x, "pod", "pairwise", round_idx=0),
+                axis_env=[("pod", 3)])(jnp.zeros(4))
+
+    def test_pairwise_without_round_rejected(self):
+        """A frozen pairing would converge each disjoint pair to its own
+        mean — gossip_mix must refuse rather than mix wrongly."""
+        with pytest.raises(ValueError, match="round"):
+            jax.make_jaxpr(
+                lambda x: S.gossip_mix(x, "pod", "pairwise"),
+                axis_env=[("pod", 4)])(jnp.zeros(4))
+
+    def test_slowmo_gossip_rejected(self):
+        with pytest.raises(ValueError):
+            S.validate(SyncConfig(topology="ring", slowmo=0.5))
+
+
+# ---------------------------------------------------------------------------
+# the gossip property, mechanically: jaxpr primitive analysis
+# ---------------------------------------------------------------------------
+
+def _collect_prims(jaxpr, acc=None):
+    """All primitive names, recursing into cond/scan/switch sub-jaxprs."""
+    acc = set() if acc is None else acc
+    for eqn in jaxpr.eqns:
+        acc.add(eqn.primitive.name)
+        for p in eqn.params.values():
+            objs = p if isinstance(p, (list, tuple)) else (p,)
+            for o in objs:
+                sub = getattr(o, "jaxpr", None)
+                if sub is not None:
+                    _collect_prims(sub, acc)
+    return acc
+
+
+GLOBAL_COLLECTIVES = ("psum", "all_gather", "all_reduce", "pmax", "pmin",
+                      "all_to_all")
+
+
+def _block_jaxpr(topology: str, overlap: str, k: int = 8, d: int = 8):
+    blockfn = svm._make_worker_block("pod", c=1.0, grad_impl="jnp",
+                                     overlap=overlap, chunks=2, d=d,
+                                     topology=topology)
+    dp = -(-d // 2) * 2 if overlap == "chunked" else d
+    carry = {"w": jnp.zeros(dp)}
+    if overlap == "delayed":
+        carry["pending"] = jnp.zeros(d)
+    if overlap == "chunked" or topology == "pairwise":
+        carry["cnt"] = jnp.zeros((), jnp.int32)
+    xb, yb = jnp.zeros((4, d)), jnp.zeros((4,))
+    return jax.make_jaxpr(
+        lambda c, x, y: blockfn(c, x, y, 0.5),
+        axis_env=[("pod", k)])(carry, xb, yb).jaxpr
+
+
+class TestGossipEmitsNoGlobalCollective:
+    @pytest.mark.parametrize("topology", ["ring", "pairwise"])
+    @pytest.mark.parametrize("overlap", ["none", "delayed", "chunked"])
+    def test_gossip_block_is_ppermute_only(self, topology, overlap):
+        prims = _collect_prims(_block_jaxpr(topology, overlap))
+        assert "ppermute" in prims, prims
+        bad = {p for p in prims
+               if any(p.startswith(g) for g in GLOBAL_COLLECTIVES)}
+        assert not bad, bad
+
+    def test_all_block_has_global_collective_sanity(self):
+        prims = _collect_prims(_block_jaxpr("all", "none"))
+        assert any(p.startswith("psum") for p in prims), prims
+        assert "ppermute" not in prims
+
+    def test_delayed_gossip_ppermute_feeds_no_dot(self):
+        """Across two chained delayed-ring blocks no dot_general consumes a
+        ppermute output — the gossip exchange only flows into the carried
+        pending correction, so it can run under the next block's compute
+        (the PR 1 overlap property, gossip edition)."""
+        from test_overlap import _collective_taints_dot
+        d, bs = 8, 4
+        blockfn = svm._make_worker_block("pod", c=1.0, grad_impl="jnp",
+                                         overlap="delayed", chunks=2, d=d,
+                                         topology="ring")
+        carry = {"w": jnp.zeros(d), "pending": jnp.zeros(d)}
+        xb, yb = jnp.zeros((bs, d)), jnp.zeros((bs,))
+
+        def two_blocks(carry, x1, y1, x2, y2):
+            c1 = blockfn(carry, x1, y1, 0.5)
+            return blockfn(c1, x2, y2, 0.5)
+
+        jaxpr = jax.make_jaxpr(two_blocks, axis_env=[("pod", 8)])(
+            carry, xb, yb, xb, yb).jaxpr
+        assert not _collective_taints_dot(jaxpr, source_prim="ppermute")
+
+
+# ---------------------------------------------------------------------------
+# byte accounting + the autotuner guardrail
+# ---------------------------------------------------------------------------
+
+class TestGossipBytes:
+    def test_ring_bytes_independent_of_world(self):
+        """Acceptance: ring moves O(1) neighbor bytes per sync vs the
+        all-reduce's 2P(K−1)/K."""
+        p = 8_000_000
+        ring = [S.collective_bytes_per_sync(
+            p, k, SyncConfig(topology="ring")) for k in (2, 4, 16, 64)]
+        assert len(set(ring)) == 1
+        assert ring[0] == 2 * p
+        allred = [S.collective_bytes_per_sync(p, k, SyncConfig())
+                  for k in (2, 4, 16, 64)]
+        assert allred == sorted(allred)          # grows with K
+        assert ring[0] == pytest.approx(2 * p)   # vs 2P(K−1)/K → 2P
+
+    def test_pairwise_halves_ring_bytes(self):
+        p = 1_000_000
+        ring = S.collective_bytes_per_sync(p, 8, SyncConfig(topology="ring"))
+        pair = S.collective_bytes_per_sync(
+            p, 8, SyncConfig(topology="pairwise"))
+        assert pair == pytest.approx(ring / 2)
+
+    @pytest.mark.parametrize("topology", ["all", "ring", "pairwise"])
+    @pytest.mark.parametrize("compression", ["none", "int8", "int16"])
+    @pytest.mark.parametrize("overlap", ["none", "delayed", "chunked"])
+    def test_bytes_and_tuner_agree_per_topology(self, topology, compression,
+                                                overlap):
+        """collective_bytes_per_sync ≡ wire_bytes_per_sync ≡ sync_time·BW
+        for every (topology × compression × overlap) cell."""
+        cfg = SyncConfig(strategy="periodic", period=8, topology=topology,
+                         compression=compression, overlap=overlap, chunks=4)
+        for k in (2, 4, 16):
+            p = 10_000_000
+            inp = TuneInputs(param_bytes_per_chip=p, replicas=k,
+                             step_time_s=0.09, link_bw=1e9,
+                             grad_norm=1.0, param_norm=100.0, lr=3e-4)
+            from_tuner = sync_time_s(inp, cfg) * inp.link_bw
+            from_sync = S.collective_bytes_per_sync(p, k, cfg)
+            assert from_sync == pytest.approx(from_tuner, rel=1e-9, abs=1.0)
+            assert from_sync == pytest.approx(
+                costmodel.wire_bytes_per_sync(p, k, cfg), rel=1e-9, abs=1.0)
+
+    def test_gossip_compression_scales_payload(self):
+        p = 4_000_000
+        fp = S.collective_bytes_per_sync(p, 8, SyncConfig(topology="ring"))
+        i16 = S.collective_bytes_per_sync(
+            p, 8, SyncConfig(topology="ring", compression="int16"))
+        i8 = S.collective_bytes_per_sync(
+            p, 8, SyncConfig(topology="ring", compression="int8"))
+        assert i16 == pytest.approx(fp / 2)
+        assert i8 == pytest.approx(fp / 4)
+
+
+class TestSpectralGuardrail:
+    def _inp(self, k=8):
+        # huge comm pressure so h_comm is large and the drift cap binds
+        return TuneInputs(param_bytes_per_chip=10**12, replicas=k,
+                          step_time_s=1e-4, link_bw=6.25e9,
+                          grad_norm=1.0, param_norm=100.0, lr=1e-3)
+
+    def test_gossip_h_capped_by_spectral_gap(self):
+        inp = self._inp()
+        cap = drift_cap(inp, 0.01)
+        assert cap > 4
+        for topo in ("ring", "pairwise"):
+            cfg = SyncConfig(strategy="periodic", topology=topo)
+            h = choose_period(inp, cfg, target_overhead=0.05, max_drift=0.01)
+            gap = costmodel.spectral_gap(8, topo)
+            assert h == max(1, int(cap * gap)), (topo, h, cap, gap)
+
+    def test_gossip_h_never_exceeds_all(self):
+        for k in (2, 4, 8, 16):
+            inp = self._inp(k)
+            h_all = choose_period(inp, SyncConfig(strategy="periodic"),
+                                  max_drift=0.01)
+            for topo in ("ring", "pairwise"):
+                h = choose_period(
+                    inp, SyncConfig(strategy="periodic", topology=topo),
+                    max_drift=0.01)
+                assert 1 <= h <= h_all, (k, topo, h, h_all)
+
+    def test_h_ordering_follows_spectral_gap(self):
+        """The faster mixer gets the larger H. At K=8 the alternating
+        pairwise schedule (λ₂=√½≈0.71) out-mixes the static ring
+        (λ₂≈0.80) despite moving half the bytes — the guardrail must rank
+        them by gap, not by degree."""
+        inp = self._inp(8)
+        h_ring = choose_period(
+            inp, SyncConfig(strategy="periodic", topology="ring"),
+            max_drift=0.01)
+        h_pair = choose_period(
+            inp, SyncConfig(strategy="periodic", topology="pairwise"),
+            max_drift=0.01)
+        assert costmodel.spectral_gap(8, "pairwise") > costmodel.spectral_gap(
+            8, "ring")
+        assert h_pair >= h_ring

@@ -253,6 +253,22 @@ print("OK")
         assign_eq = S.chunk_assignment([jnp.zeros(5)] * 3, 3)
         assert sorted(assign_eq) == [0, 1, 2], assign_eq
 
+    def test_chunk_assignment_weighs_dtype_bytes(self):
+        """Mixed-precision regression: balancing by element count would
+        pair the bf16 leaf with an extra on one shard while the
+        same-element-count fp32 leaf idles alone — by *bytes* the fp32
+        leaf (2× wire weight) must sit alone and the two bf16 leaves
+        together."""
+        f32 = jnp.zeros((64,), jnp.float32)      # 256 bytes
+        b16a = jnp.zeros((64,), jnp.bfloat16)    # 128 bytes
+        b16b = jnp.zeros((64,), jnp.bfloat16)    # 128 bytes
+        assign = S.chunk_assignment([f32, b16a, b16b], 2)
+        assert assign[1] == assign[2] != assign[0], assign
+        # element-count ties with different itemsize are NOT ties in bytes:
+        # greedy largest-first places the fp32 leaf before either bf16 one
+        assign2 = S.chunk_assignment([b16a, f32, b16b], 2)
+        assert assign2[0] == assign2[2] != assign2[1], assign2
+
 
 class TestFlush:
     def test_flush_overlap_recovers_synchronized_model(self):
@@ -277,6 +293,45 @@ class TestFlush:
         same = S.flush_overlap(stacked, {}, SyncConfig(strategy="periodic"))
         np.testing.assert_array_equal(np.asarray(same["w"]),
                                       np.asarray(stacked["w"]))
+
+    def test_flush_overlap_folds_error_feedback_residual(self):
+        """Compression regression: the EF buffer is quantization error each
+        replica would have re-submitted at its next sync — dropping it on
+        flush biases a checkpoint-resume. Flush must add the per-replica
+        residual before the collapse (its replica mean survives), and
+        finalize_state must zero the buffer so resume doesn't double-count."""
+        rng = np.random.default_rng(1)
+        anchor = rng.normal(size=(6,)).astype(np.float32)
+        deltas = rng.normal(size=(4, 6)).astype(np.float32)
+        efs = 0.01 * rng.normal(size=(4, 6)).astype(np.float32)
+        step_delta = deltas.mean(0)
+        stacked = {"w": jnp.asarray(anchor[None] + deltas)}
+        sync_state = {"pending": {"w": jnp.asarray(step_delta[None] - deltas)},
+                      "ef": {"w": jnp.asarray(efs)}}
+        cfg = SyncConfig(strategy="periodic", overlap="delayed",
+                         compression="int8")
+        flushed = S.flush_overlap(stacked, sync_state, cfg)
+        want = anchor + step_delta + efs.mean(0)
+        np.testing.assert_allclose(
+            np.asarray(flushed["w"]), np.broadcast_to(want, (4, 6)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_finalize_state_zeroes_folded_ef(self):
+        from repro.config import TrainConfig
+        from repro.core import local_sgd as LS
+        cfg = TrainConfig(sync=SyncConfig(strategy="periodic",
+                                          overlap="delayed",
+                                          compression="int8"))
+        state = {"params": {"w": jnp.ones((2, 4))},
+                 "opt": {}, "step": jnp.zeros((), jnp.int32),
+                 "sync": {"pending": {"w": jnp.zeros((2, 4))},
+                          "ef": {"w": jnp.full((2, 4), 0.25)}}}
+        out = LS.finalize_state(state, cfg)
+        # residual folded into params…
+        np.testing.assert_allclose(np.asarray(out["params"]["w"]), 1.25,
+                                   rtol=1e-6)
+        # …and cleared from the state (no double count on resume)
+        assert float(np.abs(np.asarray(out["sync"]["ef"]["w"])).max()) == 0.0
 
     def test_finalize_state_clears_pending(self):
         from repro.config import TrainConfig
@@ -346,8 +401,9 @@ except ImportError:      # older jax
     from jax.core import Literal as _Literal
 
 
-def _collective_taints_dot(jaxpr) -> bool:
-    """True iff any dot_general transitively consumes a psum output."""
+def _collective_taints_dot(jaxpr, source_prim: str = "psum") -> bool:
+    """True iff any dot_general transitively consumes a ``source_prim``
+    output (prefix match — also used by test_gossip with "ppermute")."""
     tainted = set()
     found = False
     for eqn in jaxpr.eqns:
@@ -357,7 +413,7 @@ def _collective_taints_dot(jaxpr) -> bool:
                          if not isinstance(v, _Literal))
         if prim == "dot_general" and in_tainted:
             found = True
-        if prim.startswith("psum") or in_tainted:
+        if prim.startswith(source_prim) or in_tainted:
             tainted.update(v for v in eqn.outvars)
     return found
 

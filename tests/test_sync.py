@@ -93,7 +93,48 @@ print("ERR", err)
     def test_int16_sync_close_to_mean(self):
         err = self._run_sync(SyncConfig(strategy="periodic", period=4,
                                         compression="int16"))
-        assert err < 2e-3  # 14-bit fixed point of unit-scale data
+        assert err < 2e-3  # ~13-bit fixed point of unit-scale data
+
+    def test_int16_world8_no_overflow_regression(self):
+        """world ≥ 4 regression: the old fixed ±8192 clip made the int16
+        psum wrap (4·8192 = 32768 > int16 max) whenever the replicas'
+        quantized values aligned in sign — same-sign deltas at world=8
+        summed to garbage. The headroom now scales with the replica count
+        (qmax = 32767 // K), so the worst-case aligned sum stays in
+        range."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import sync as S
+from repro.config import SyncConfig
+k, d = 8, 32
+cfg = SyncConfig(strategy="periodic", period=4, compression="int16")
+mesh = jax.make_mesh((k,), ("pod",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+start = jnp.zeros((d,), jnp.float32)
+# identical ends on every replica: each quantizes to ±qmax exactly — the
+# sign-aligned worst case that overflowed the old fixed-headroom psum
+ends = jnp.broadcast_to(jnp.where(jnp.arange(d) % 2 == 0, 1.0, -1.0),
+                        (k, d)).astype(jnp.float32)
+
+def body(start, ends):
+    p0 = {"w": start}
+    p1 = {"w": ends[0]}
+    st = S.init_sync_state(cfg, p0)
+    new, _ = S.sync_point(p0, p1, st, cfg, "pod")
+    return new["w"][None]
+
+f = jax.shard_map(body, mesh=mesh, in_specs=(P(), P("pod")),
+                  out_specs=P("pod"), axis_names={"pod"}, check_vma=False)
+with jax.set_mesh(mesh):
+    out = np.asarray(jax.jit(f)(start, ends))
+expect = np.asarray(ends)          # mean of identical replicas
+err = np.abs(out - expect).max()
+print("ERR", err)
+assert err < 2e-3, err
+"""
+        out = run_with_devices(code, n_devices=8)
+        assert float(out.strip().split()[-1]) < 2e-3
 
     def test_state_axes_match_init(self):
         cfg = SyncConfig(strategy="periodic", compression="int8", slowmo=0.9)
