@@ -22,7 +22,6 @@ Beyond-paper perf sections:
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 from typing import Dict, List
@@ -31,10 +30,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import record
 from repro.core import svm
 from repro.data import make_svm_dataset
 
-OUT_DIR = "experiments/paper"
+OUT_DIR = record.OUT_DIR
 
 # scaled-down sample counts (feature dims stay faithful — they set the
 # communication volume, which is what the paper measures)
@@ -47,9 +47,7 @@ def _ds(name):
 
 
 def _save(name: str, rows: List[Dict]) -> None:
-    os.makedirs(OUT_DIR, exist_ok=True)
-    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
-        json.dump(rows, f, indent=1)
+    record.save(name, rows)
 
 
 def fig1_3() -> List[str]:

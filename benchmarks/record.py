@@ -1,0 +1,34 @@
+"""Shared JSON record sink for benchmark sweeps.
+
+Every sweep writes its structured rows here (``save``), which both
+persists the per-sweep JSON under ``experiments/paper/`` (the historical
+location the repo's BENCH artifacts live in) and registers the rows so
+``benchmarks.run --json`` can bundle everything a sweep produced into one
+uniform ``BENCH_<sweep>.json`` trajectory record (``take_saved``).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+OUT_DIR = "experiments/paper"
+
+_LAST_SAVED: Dict[str, List[Dict]] = {}
+
+
+def save(name: str, rows: List[Dict]) -> str:
+    """Persist one sweep section's rows and register them for --json."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    _LAST_SAVED[name] = rows
+    return path
+
+
+def take_saved() -> Dict[str, List[Dict]]:
+    """Drain the records registered since the last call (run.py --json)."""
+    out = dict(_LAST_SAVED)
+    _LAST_SAVED.clear()
+    return out

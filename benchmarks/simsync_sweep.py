@@ -1,0 +1,170 @@
+"""Simulated sync-schedule sweep + adaptive-controller validation.
+
+The host CPU cannot show the paper's headline effect (its collectives
+serialize), so this sweep replays the schedules on the simsync cluster
+simulator instead — deterministic (fixed seeds), CPU-cheap, and grounded
+in the same cost-model wire bytes as the real engine. Four sections:
+
+  comm     — simulated comm time vs H across topology × overlap on the
+             default DCN profile: the paper's Figs 13–15 shape (comm time
+             ∝ 1/H; the H=1 → H_max reduction is the 16x–24x regime and
+             beyond — the acceptance bar is ≥ 10x).
+  straggler— transient-straggler decoupling: wall clock + exposed comm of
+             all-reduce vs ring/pairwise gossip under delayed overlap on
+             the dcn_transient profile (ROADMAP's "what the 2-core host
+             cannot measure").
+  adaptive — closed-loop AdaptiveController convergence vs the simulator's
+             oracle-optimal H on distinct cluster profiles, with the
+             (block, H) trajectory.
+  artifacts— Chrome traces (all vs ring on the straggler profile) and a
+             dependency-free SVG of the comm ∝ 1/H curve, under
+             experiments/paper/ for the CI artifact upload.
+
+Run via ``python -m benchmarks.run simsync_sweep [--json]``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+from benchmarks import record
+from repro.config.base import SyncConfig
+from repro.core.autotune import AdaptiveController
+from repro.simsync import (PROFILES, oracle_h, save_chrome_trace, simulate,
+                           simulate_adaptive)
+
+STEPS = 2048              # fixed optimizer-step budget per simulated run
+H_LADDER = (1, 2, 4, 8, 16, 32, 64)
+SEED = 0                  # deterministic: CI asserts on these rows
+
+
+def _svg_comm_vs_h(rows: List[Dict], path: str) -> str:
+    """Dependency-free log–log SVG of comm time vs H (one polyline per
+    topology, blocking overlap) — the Figs 13–15 regeneration artifact."""
+    import math
+    series: Dict[str, List] = {}
+    for r in rows:
+        if r.get("section") == "comm" and r["overlap"] == "none":
+            series.setdefault(r["topology"], []).append(
+                (r["H"], max(r["comm_exposed_s"], 1e-9)))
+    w, h, pad = 480, 320, 48
+    xs = [math.log2(hh) for s in series.values() for hh, _ in s]
+    ys = [math.log10(c) for s in series.values() for _, c in s]
+    x0, x1 = min(xs), max(xs) or 1
+    y0, y1 = min(ys), max(ys)
+    sx = lambda v: pad + (v - x0) / max(x1 - x0, 1e-9) * (w - 2 * pad)
+    sy = lambda v: h - pad - (v - y0) / max(y1 - y0, 1e-9) * (h - 2 * pad)
+    colors = {"all": "#1f77b4", "ring": "#d62728", "pairwise": "#2ca02c"}
+    parts = [f'<svg xmlns="http://www.w3.org/2000/svg" width="{w}" '
+             f'height="{h}" font-family="sans-serif" font-size="11">',
+             f'<text x="{w//2}" y="16" text-anchor="middle">simulated comm '
+             'time vs MSF period H (dcn_default, blocking)</text>',
+             f'<line x1="{pad}" y1="{h-pad}" x2="{w-pad}" y2="{h-pad}" '
+             'stroke="#333"/>',
+             f'<line x1="{pad}" y1="{pad}" x2="{pad}" y2="{h-pad}" '
+             'stroke="#333"/>',
+             f'<text x="{w//2}" y="{h-12}" text-anchor="middle">H '
+             '(log2)</text>']
+    for i, (topo, pts) in enumerate(sorted(series.items())):
+        pts = sorted(pts)
+        poly = " ".join(f"{sx(math.log2(hh)):.1f},"
+                        f"{sy(math.log10(c)):.1f}" for hh, c in pts)
+        col = colors.get(topo, "#999")
+        parts.append(f'<polyline points="{poly}" fill="none" '
+                     f'stroke="{col}" stroke-width="2"/>')
+        parts.append(f'<text x="{w-pad+4}" y="{pad+14*i}" fill="{col}">'
+                     f'{topo}</text>')
+        for hh, c in pts:
+            parts.append(f'<circle cx="{sx(math.log2(hh)):.1f}" '
+                         f'cy="{sy(math.log10(c)):.1f}" r="3" '
+                         f'fill="{col}"/>')
+    parts.append("</svg>")
+    with open(path, "w") as f:
+        f.write("\n".join(parts))
+    return path
+
+
+def run() -> List[str]:
+    lines: List[str] = []
+    rows: List[Dict] = []
+    os.makedirs(record.OUT_DIR, exist_ok=True)
+
+    # --- 1) comm time vs H: topology × overlap grid on the DCN profile --
+    prof = PROFILES["dcn_default"]
+    for topo in ("all", "ring", "pairwise"):
+        for overlap in ("none", "delayed", "chunked"):
+            for h in H_LADDER:
+                cfg = SyncConfig(strategy="periodic", topology=topo,
+                                 overlap=overlap)
+                r = simulate(prof, cfg, h=h, steps=STEPS, seed=SEED)
+                rows.append({"section": "comm", "profile": prof.name,
+                             "topology": topo, "overlap": overlap, "H": h,
+                             **{k: v for k, v in r.summary().items()
+                                if k not in ("profile", "sync")}})
+                lines.append(
+                    f"simsync_sweep,comm,topo={topo} ov={overlap} H={h},"
+                    f"{r.comm_exposed_s*1e3:.2f}")
+    base = [r for r in rows if r["topology"] == "all"
+            and r["overlap"] == "none"]
+    red = base[0]["comm_exposed_s"] / base[-1]["comm_exposed_s"]
+    rows.append({"section": "comm_reduction", "profile": prof.name,
+                 "h_lo": H_LADDER[0], "h_hi": H_LADDER[-1],
+                 "reduction_x": red})
+    lines.append(f"simsync_sweep,comm_reduction,"
+                 f"H={H_LADDER[0]}->H={H_LADDER[-1]},{red:.1f}x")
+
+    # --- 2) transient-straggler decoupling (gossip + delayed overlap) ---
+    pt = PROFILES["dcn_transient"]
+    wall = {}
+    for topo in ("all", "ring", "pairwise"):
+        cfg = SyncConfig(strategy="periodic", topology=topo,
+                         overlap="delayed")
+        r = simulate(pt, cfg, h=16, steps=2 * STEPS, seed=SEED)
+        wall[topo] = r.wall_clock_s
+        rows.append({"section": "straggler", "profile": pt.name,
+                     "topology": topo, "H": 16,
+                     "wall_s": r.wall_clock_s,
+                     "comm_exposed_s": r.comm_exposed_s})
+        lines.append(f"simsync_sweep,straggler,topo={topo},"
+                     f"{r.wall_clock_s:.3f}")
+    lines.append(f"simsync_sweep,straggler_decoupling,ring_vs_all,"
+                 f"{wall['all'] / wall['ring']:.3f}x")
+
+    # --- 3) adaptive controller vs the simulator oracle -----------------
+    cfg = SyncConfig(strategy="periodic")
+    for name in ("dcn_default", "ici_pod", "dcn_straggler"):
+        p = PROFILES[name]
+        oh = oracle_h(p, cfg, target_overhead=0.05, steps=STEPS, seed=SEED)
+        ctrl = AdaptiveController(cfg, param_bytes_per_chip=p.param_bytes,
+                                  replicas=p.world,
+                                  link_bw=p.link.bandwidth, h0=1,
+                                  adapt_every=8, lr=1e-6)
+        _, hist = simulate_adaptive(p, cfg, ctrl, blocks=200, seed=SEED + 1)
+        rel = abs(ctrl.h - oh) / max(1, oh)
+        rows.append({"section": "adaptive", "profile": name,
+                     "oracle_h": oh, "controller_h": ctrl.h,
+                     "rel_err": rel, "history": hist,
+                     "telemetry": ctrl.telemetry.to_dict()})
+        lines.append(f"simsync_sweep,adaptive,{name} oracle={oh},"
+                     f"ctrl={ctrl.h} rel={rel:.3f}")
+
+    # --- 4) artifacts: chrome traces + the Figs 13–15 SVG ---------------
+    for topo in ("all", "ring"):
+        cfg_t = SyncConfig(strategy="periodic", topology=topo,
+                           overlap="delayed")
+        r = simulate(pt, cfg_t, h=16, blocks=24, seed=SEED,
+                     record_timeline=True)
+        path = os.path.join(record.OUT_DIR, f"simsync_trace_{topo}.json")
+        save_chrome_trace(path, r)
+        lines.append(f"simsync_sweep,trace,{topo},{path}")
+    svg = _svg_comm_vs_h(rows, os.path.join(record.OUT_DIR,
+                                            "simsync_comm_vs_h.svg"))
+    lines.append(f"simsync_sweep,figure,comm_vs_h,{svg}")
+
+    record.save("simsync_sweep", rows)
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

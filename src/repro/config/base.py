@@ -162,12 +162,25 @@ class SyncConfig:
     overlap: str = "none"          # none | delayed | chunked
     chunks: int = 4                # R — shard count for overlap="chunked"
     topology: str = "all"          # all | ring | pairwise (gossip)
+    # --- adaptive MSF (repro.core.autotune.AdaptiveController) ---------
+    # When ``adaptive`` is on, the training driver re-solves the period
+    # online from measured T_step/T_sync every ``adapt_every`` blocks
+    # (``period`` is the starting H). ``adapt_hysteresis`` is the relative
+    # change required before H actually moves (every move recompiles the
+    # train block); target/drift mirror choose_period's knobs.
+    adaptive: bool = False
+    adapt_every: int = 16          # R — blocks between controller re-solves
+    adapt_hysteresis: float = 0.25
+    adapt_target_overhead: float = 0.05
+    adapt_max_drift: float = 0.01
 
     @property
     def msf_label(self) -> str:
         tail = "" if self.overlap == "none" else f",overlap={self.overlap}"
         if self.topology != "all":
             tail += f",topo={self.topology}"
+        if self.adaptive:
+            tail += ",adaptive"
         return f"{self.strategy}(H={self.period},comp={self.compression}{tail})"
 
 

@@ -36,6 +36,16 @@ SYNC_PRESETS: Dict[str, SyncConfig] = {
     "hierarchical_gossip_ring": SyncConfig(strategy="hierarchical",
                                            period=64, topology="ring",
                                            overlap="delayed"),
+    # adaptive MSF (ISSUE 3): the controller re-solves H online from
+    # measured T_step/T_sync every adapt_every blocks — `period` is only
+    # the starting point. DCN flavor starts low and grows into the fabric;
+    # the gossip flavor keeps the spectral-gap cap in the loop.
+    "adaptive_dcn": SyncConfig(strategy="hierarchical", period=8,
+                               overlap="delayed", adaptive=True,
+                               adapt_every=16),
+    "adaptive_gossip_ring": SyncConfig(strategy="periodic", period=8,
+                                       topology="ring", overlap="delayed",
+                                       adaptive=True, adapt_every=16),
 }
 
 

@@ -89,7 +89,8 @@ def drift_cap(inp: TuneInputs, max_drift: float) -> int:
 def choose_period(inp: TuneInputs, cfg: Optional[SyncConfig] = None, *,
                   target_overhead: float = 0.05,
                   max_drift: float = 0.01,
-                  overlap: Optional[str] = None) -> int:
+                  overlap: Optional[str] = None,
+                  sync_time_override: Optional[float] = None) -> int:
     """Smallest H with *exposed* sync overhead ≤ ``target_overhead``·step
     time, clipped by the statistical drift cap.
 
@@ -99,11 +100,16 @@ def choose_period(inp: TuneInputs, cfg: Optional[SyncConfig] = None, *,
     ``T_sync/H ≤ (1+target)·T_step`` — so delayed H is always ≤ the
     blocking H for the same inputs (more frequent averaging, same wall
     clock).
+
+    ``sync_time_override`` replaces the analytic wire-bytes/bandwidth
+    ``T_sync`` with a *measured* collective time (telemetry) — the adaptive
+    controller's path: same solver, calibrated inputs.
     """
     cfg = cfg or SyncConfig(strategy="hierarchical")
     if overlap is not None:
         cfg = dataclasses.replace(cfg, overlap=overlap)
-    t_sync = sync_time_s(inp, cfg)
+    t_sync = (sync_time_override if sync_time_override is not None
+              else sync_time_s(inp, cfg))
     if t_sync <= 0 or inp.step_time_s <= 0:
         return 1
     if cfg.overlap == "delayed":
@@ -131,6 +137,133 @@ def choose_period(inp: TuneInputs, cfg: Optional[SyncConfig] = None, *,
 def predicted_step_time(inp: TuneInputs, cfg: SyncConfig, h: int) -> float:
     return costmodel.overlapped_step_time(
         inp.step_time_s, sync_time_s(inp, cfg), h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# online adaptive MSF: choose_period re-solved from running telemetry
+# ---------------------------------------------------------------------------
+
+class AdaptiveController:
+    """Closed-loop MSF tuning: re-solve :func:`choose_period` from measured
+    ``T_step``/``T_sync`` EMAs every ``adapt_every`` blocks.
+
+    This turns the static tuner into the adaptive sync-interval scheme of
+    Keuper & Pfreundt (arXiv:1510.01155): instead of a hand sweep (or one
+    analytic guess from nominal bandwidth), the period tracks what the
+    fabric and the workload *actually* do — a contended DCN shows up as a
+    larger measured ``T_sync`` and the controller raises H; a fast fabric
+    lowers it. All of ``choose_period``'s guardrails (drift cap, chunked
+    effective-period scaling, gossip spectral-gap cap) still apply because
+    it is the same solver — only ``T_sync`` is overridden by telemetry.
+
+    Hysteresis: H only moves when the re-solve differs from the current
+    period by more than ``hysteresis`` (relative), so measurement noise
+    cannot thrash the schedule (every H change recompiles the train block
+    on the real path). Defaults come from the ``SyncConfig.adapt_*``
+    fields; ``history`` records every ``(block, H)`` transition.
+
+    The driver loop (trainer or :func:`repro.simsync.engine
+    .simulate_adaptive`) calls :meth:`observe_block` once per executed
+    block and reads back ``.h``::
+
+        ctrl = AdaptiveController(cfg, param_bytes_per_chip=P, replicas=K)
+        for block in schedule:
+            run_block(h=ctrl.h)
+            ctrl.observe_block(step_s=..., sync_s=...)
+    """
+
+    def __init__(self, cfg: SyncConfig, *, param_bytes_per_chip: int,
+                 replicas: int, link_bw: float = DCN_BW, lr: float = 1e-3,
+                 h0: Optional[int] = None,
+                 telemetry: Optional["BlockTelemetry"] = None,
+                 adapt_every: Optional[int] = None,
+                 hysteresis: Optional[float] = None,
+                 target_overhead: Optional[float] = None,
+                 max_drift: Optional[float] = None,
+                 h_max: int = 1024):
+        from repro.core.telemetry import BlockTelemetry
+        self.cfg = cfg
+        self.param_bytes_per_chip = param_bytes_per_chip
+        self.replicas = replicas
+        self.link_bw = link_bw
+        self.lr = lr
+        self.telemetry = telemetry or BlockTelemetry()
+        self.adapt_every = max(1, adapt_every if adapt_every is not None
+                               else cfg.adapt_every)
+        self.hysteresis = (hysteresis if hysteresis is not None
+                           else cfg.adapt_hysteresis)
+        self.target_overhead = (target_overhead if target_overhead is not None
+                                else cfg.adapt_target_overhead)
+        self.max_drift = (max_drift if max_drift is not None
+                          else cfg.adapt_max_drift)
+        self.h_max = max(1, h_max)
+        self.h = max(1, min(h0 if h0 is not None else cfg.period,
+                            self.h_max))
+        self._grad_norm = _ema_default()
+        self._param_norm = _ema_default()
+        self._blocks = 0
+        self.history = [(0, self.h)]
+
+    def observe_block(self, *, block_s: Optional[float] = None,
+                      sync_s: Optional[float] = None,
+                      step_s: Optional[float] = None,
+                      grad_norm: Optional[float] = None,
+                      param_norm: Optional[float] = None) -> int:
+        """Feed one block's measurements; returns the (possibly updated) H.
+
+        ``step_s`` is the per-STEP compute time when measured separately
+        (timed-step paths); otherwise pass the whole-block ``block_s`` (and
+        ``sync_s`` when the collective was instrumented) and the telemetry
+        separates the two.
+        """
+        if step_s is not None:
+            self.telemetry.record_step_time(step_s)
+            if sync_s is not None:
+                self.telemetry.record_sync_time(sync_s)
+        elif block_s is not None:
+            self.telemetry.record_block(self.h, block_s, sync_s)
+        elif sync_s is not None:
+            self.telemetry.record_sync_time(sync_s)
+        if grad_norm is not None:
+            self._grad_norm.update(float(grad_norm))
+        if param_norm is not None:
+            self._param_norm.update(float(param_norm))
+        self._blocks += 1
+        if self._blocks % self.adapt_every == 0:
+            self._resolve()
+        return self.h
+
+    def _resolve(self) -> None:
+        est = self.telemetry.estimates()
+        if est is None:
+            return
+        t_step, t_sync = est
+        if t_step <= 0:
+            return
+        inp = TuneInputs(
+            param_bytes_per_chip=self.param_bytes_per_chip,
+            replicas=self.replicas, step_time_s=t_step,
+            link_bw=self.link_bw,
+            grad_norm=self._grad_norm.value or 1.0,
+            param_norm=self._param_norm.value or 1.0, lr=self.lr)
+        h_new = min(self.h_max,
+                    choose_period(inp, self.cfg,
+                                  target_overhead=self.target_overhead,
+                                  max_drift=self.max_drift,
+                                  sync_time_override=t_sync))
+        if h_new != self.h and abs(h_new - self.h) > self.hysteresis * self.h:
+            self.h = h_new
+            self.history.append((self._blocks, h_new))
+
+    def to_dict(self) -> dict:
+        return {"h": self.h, "blocks": self._blocks,
+                "history": list(self.history),
+                "telemetry": self.telemetry.to_dict()}
+
+
+def _ema_default():
+    from repro.core.telemetry import EMA
+    return EMA(0.9)
 
 
 def report(inp: TuneInputs, cfg: Optional[SyncConfig] = None) -> dict:

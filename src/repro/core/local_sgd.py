@@ -44,6 +44,7 @@ collective).
 from __future__ import annotations
 
 import functools
+import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -129,8 +130,34 @@ def state_shardings(state_axes, rules: ShardingRules, state_shapes=None):
 # flavor A — every-step sync (paper baseline / canonical DDP)
 # ---------------------------------------------------------------------------
 
+def timed_step(step_fn: Callable, h: int, telemetry, *,
+               jit_step: bool = True) -> Callable:
+    """Wrap a (state, batch) step with the block-time telemetry hook.
+
+    Jitted code cannot time itself, so the timer brackets the host-side
+    call (``block_until_ready`` on the params makes the wall time real).
+    ``h`` is the optimizer steps one call advances — the telemetry's key
+    for separating T_step from T_sync (see core.telemetry). A Python
+    timing closure cannot be jitted by the caller, so by default the
+    wrapper owns the jit; pass ``jit_step=False`` for a step that is
+    already compiled (e.g. the launch driver's sharded/donating jit —
+    re-jitting it would drop those options). Telemetry's warmup discards
+    the compile-inflated first sample either way.
+    """
+    step_c = jax.jit(step_fn) if jit_step else step_fn
+
+    def timed(state, batch):
+        t0 = time.perf_counter()
+        out = step_c(state, batch)
+        jax.block_until_ready(out[0]["params"])
+        telemetry.record_block(h, time.perf_counter() - t0)
+        return out
+    return timed
+
+
 def make_ddp_step(model, cfg: TrainConfig, mesh: Mesh,
-                  rules: Optional[ShardingRules] = None) -> Callable:
+                  rules: Optional[ShardingRules] = None,
+                  telemetry=None) -> Callable:
     """(state, batch) → (state, metrics); grad all-reduce every step."""
     rules = rules or rules_for(cfg.mesh, mesh)
 
@@ -148,7 +175,7 @@ def make_ddp_step(model, cfg: TrainConfig, mesh: Mesh,
         metrics = {"loss": loss, **aux}
         return new_state, metrics
 
-    return step
+    return timed_step(step, 1, telemetry) if telemetry is not None else step
 
 
 # ---------------------------------------------------------------------------
@@ -156,11 +183,15 @@ def make_ddp_step(model, cfg: TrainConfig, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 def make_local_sgd_block(model, cfg: TrainConfig, mesh: Mesh,
-                         rules: Optional[ShardingRules] = None) -> Callable:
+                         rules: Optional[ShardingRules] = None,
+                         telemetry=None) -> Callable:
     """(state, batch) → (state, metrics).
 
     ``batch`` leaves are (H, B_global, …): H microbatches per sync block.
     The replica axis is manual; each replica consumes its batch shard.
+    ``telemetry`` (a :class:`repro.core.telemetry.BlockTelemetry`) records
+    each block's wall time keyed by H — the measured T_step/T_sync feed
+    the simulator's calibration and the adaptive MSF controller.
     """
     replica_axis = cfg.mesh.replica_axis or "pod"
     rules = rules or rules_for(cfg.mesh, mesh)
@@ -240,6 +271,8 @@ def make_local_sgd_block(model, cfg: TrainConfig, mesh: Mesh,
         return ({"params": params, "opt": opt, "sync": sync_state,
                  "step": step}, metrics)
 
+    if telemetry is not None:
+        return timed_step(step_fn, max(1, cfg.sync.period), telemetry)
     return step_fn
 
 
@@ -270,7 +303,8 @@ def finalize_state(state, cfg: TrainConfig):
 
 
 def make_train_step(model, cfg: TrainConfig, mesh: Mesh,
-                    rules: Optional[ShardingRules] = None) -> Callable:
+                    rules: Optional[ShardingRules] = None,
+                    telemetry=None) -> Callable:
     if S.needs_replica_axis(cfg.sync):
-        return make_local_sgd_block(model, cfg, mesh, rules)
-    return make_ddp_step(model, cfg, mesh, rules)
+        return make_local_sgd_block(model, cfg, mesh, rules, telemetry)
+    return make_ddp_step(model, cfg, mesh, rules, telemetry)

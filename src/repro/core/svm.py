@@ -509,10 +509,17 @@ def dms(w0: jax.Array, x: np.ndarray, y: np.ndarray, *, workers: int,
 
 def dms_timed_steps(mesh, axis: str, *, block_size: int, c: float = 1.0,
                     grad_impl: str = "jnp", overlap: str = "none",
-                    chunks: int = 4, topology: str = "all"):
+                    chunks: int = 4, topology: str = "all",
+                    telemetry=None):
     """Returns (compute_step, sync_step) jitted separately so benchmarks can
     time computation vs communication — the paper's Figs 10–12 methodology
     (they instrument around MPI_AllReduce the same way).
+
+    ``telemetry`` (a :class:`repro.core.telemetry.BlockTelemetry`) wraps
+    both returned steps with host-side timers: each compute call records
+    ``block_size`` steps' compute time, each sync call one collective —
+    the separated T_step/T_sync feed the MSF auto-tuner's adaptive
+    controller and calibrate the simsync cluster simulator.
 
     ``overlap`` changes the sync step's signature (compute is unchanged —
     per-worker block update from per-worker models):
@@ -597,7 +604,28 @@ def dms_timed_steps(mesh, axis: str, *, block_size: int, c: float = 1.0,
     else:
         raise ValueError(f"unknown overlap mode: {overlap!r}")
 
-    return jax.jit(compute), jax.jit(sync)
+    compute_jit, sync_jit = jax.jit(compute), jax.jit(sync)
+    if telemetry is None:
+        return compute_jit, sync_jit
+
+    import time as _time
+
+    def timed_compute(*args):
+        t0 = _time.perf_counter()
+        out = compute_jit(*args)
+        jax.block_until_ready(out)
+        telemetry.record_step_time(_time.perf_counter() - t0,
+                                   steps=block_size)
+        return out
+
+    def timed_sync(*args):
+        t0 = _time.perf_counter()
+        out = sync_jit(*args)
+        jax.block_until_ready(out)
+        telemetry.record_sync_time(_time.perf_counter() - t0)
+        return out
+
+    return timed_compute, timed_sync
 
 
 # ---------------------------------------------------------------------------

@@ -73,8 +73,12 @@ Optional modifiers (beyond-paper, composable):
 * ``compression="int16"`` — fixed-point 2-byte all-reduce wire.
 * ``slowmo > 0`` — outer momentum on the averaged delta (SlowMo, Wang et
   al.); composes with ``overlap="delayed"`` (the momentum step is taken on
-  the freshly averaged delta, applied one block late), not with
-  ``"chunked"`` (no whole-tree delta to step on).
+  the freshly averaged delta, applied one block late) and with
+  ``"chunked"`` via a per-shard momentum: each leaf carries an ``anchor``
+  (its value after its own last slowmo step) and momentum-steps on
+  ``mean_K(w_leaf) − anchor`` at the boundaries where it syncs (see
+  ``_sync_point_chunked``). Gossip topologies still reject slowmo — they
+  never materialize a global mean.
 
 Byte accounting lives in :mod:`repro.core.costmodel` (shared with the MSF
 auto-tuner so the two can never drift).
@@ -101,14 +105,18 @@ def validate(cfg: SyncConfig) -> None:
         raise ValueError(f"unknown overlap mode: {cfg.overlap!r}")
     if cfg.topology not in ("all", "ring", "pairwise"):
         raise ValueError(f"unknown sync topology: {cfg.topology!r}")
-    if cfg.overlap == "chunked" and cfg.slowmo > 0.0:
-        raise ValueError("slowmo requires a whole-tree sync delta; "
-                         "overlap='chunked' averages one shard at a time")
     if cfg.topology != "all" and cfg.slowmo > 0.0:
         raise ValueError("slowmo steps on the globally averaged delta; "
                          "gossip topologies never materialize a global mean")
     if cfg.overlap == "chunked" and cfg.chunks < 1:
         raise ValueError(f"chunks must be >= 1, got {cfg.chunks}")
+    if cfg.adaptive:
+        if cfg.adapt_every < 1:
+            raise ValueError(
+                f"adapt_every must be >= 1, got {cfg.adapt_every}")
+        if cfg.adapt_hysteresis < 0.0:
+            raise ValueError("adapt_hysteresis must be >= 0, "
+                             f"got {cfg.adapt_hysteresis}")
 
 
 def init_sync_state(cfg: SyncConfig, params) -> Dict[str, Any]:
@@ -126,6 +134,12 @@ def init_sync_state(cfg: SyncConfig, params) -> Dict[str, Any]:
         state["pending"] = zeros()
     if cfg.overlap == "chunked":
         state["chunk_idx"] = jnp.zeros((), jnp.int32)
+        if cfg.slowmo > 0.0:
+            # per-shard outer momentum needs a per-leaf reference: the value
+            # this leaf held right after ITS last slowmo step (leaves sync on
+            # different boundaries, so a whole-tree block anchor can't exist)
+            state["anchor"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
     if cfg.topology == "pairwise" and cfg.overlap != "chunked":
         # round parity selects the odd/even pairing (chunked derives the
         # round from chunk_idx instead — one counter per concern)
@@ -144,6 +158,8 @@ def sync_state_axes(cfg: SyncConfig, param_axes) -> Dict[str, Any]:
         state["pending"] = param_axes
     if cfg.overlap == "chunked":
         state["chunk_idx"] = ()
+        if cfg.slowmo > 0.0:
+            state["anchor"] = param_axes
     if cfg.topology == "pairwise" and cfg.overlap != "chunked":
         state["gossip_round"] = ()
     return state
@@ -457,11 +473,26 @@ def _sync_point_chunked(params_end, sync_state, cfg, axis, param_axes):
     averaged; the pairwise round parity advances once per full round-robin
     pass (``chunk_idx // chunks``) so each leaf alternates pairings across
     its own syncs.
+
+    ``slowmo > 0`` composes via a PER-SHARD outer momentum: each leaf keeps
+    an ``anchor`` (its value right after its own last slowmo step) and a
+    momentum buffer, and this boundary's synced leaves step
+
+        m ← β·m + (mean_K(w_leaf) − anchor);  w_leaf ← anchor + lr_out·m
+
+    with the anchor advanced to the new value. Leaves sync on different
+    boundaries, so a whole-tree block delta never exists — the per-leaf
+    anchor supplies the reference the blocking/delayed paths get from
+    ``params_start``. For ``chunks=1`` (anchor ≡ block start, mean of ends
+    ≡ start + meanΔ) this reduces exactly to the blocking slowmo step.
     """
     r = max(1, cfg.chunks)
     idx = sync_state["chunk_idx"]
     ef = sync_state.get("ef")
     have_ef = ef is not None
+    slowmo = cfg.slowmo > 0.0
+    mom = sync_state.get("slowmo_m") if slowmo else None
+    anchor = sync_state.get("anchor") if slowmo else None
     ax_leaves = (jax.tree.leaves(
         param_axes, is_leaf=lambda x: x is None or isinstance(x, tuple))
         if param_axes is not None
@@ -470,10 +501,12 @@ def _sync_point_chunked(params_end, sync_state, cfg, axis, param_axes):
 
     def make_branch(rr):
         def branch(operands):
-            p_end, ef_in = operands
+            p_end, ef_in, m_in, a_in = operands
             leaves, treedef = jax.tree.flatten(p_end)
             ef_leaves = (jax.tree.leaves(ef_in) if have_ef
                          else [None] * len(leaves))
+            m_leaves = jax.tree.leaves(m_in) if slowmo else None
+            a_leaves = jax.tree.leaves(a_in) if slowmo else None
             # shard-rr leaf subset as {leaf_index: value} dict pytrees
             sub = [i for i in range(len(leaves)) if assign[i] == rr]
             vals = {i: leaves[i].astype(jnp.float32) for i in sub}
@@ -483,23 +516,37 @@ def _sync_point_chunked(params_end, sync_state, cfg, axis, param_axes):
                                           round_idx=idx // r)
             new_leaves = list(leaves)
             new_ef_leaves = list(ef_leaves)
+            new_m = list(m_leaves) if slowmo else None
+            new_a = list(a_leaves) if slowmo else None
             for i in sub:
-                new_leaves[i] = mean[i].astype(leaves[i].dtype)
+                if slowmo:
+                    m = cfg.slowmo * m_leaves[i] + (mean[i] - a_leaves[i])
+                    w_new = a_leaves[i] + cfg.slowmo_lr * m
+                    new_m[i] = m
+                    new_a[i] = w_new
+                    new_leaves[i] = w_new.astype(leaves[i].dtype)
+                else:
+                    new_leaves[i] = mean[i].astype(leaves[i].dtype)
                 if have_ef and new_ef is not None:
                     new_ef_leaves[i] = new_ef[i]
             out_p = jax.tree.unflatten(treedef, new_leaves)
             out_ef = (jax.tree.unflatten(treedef, new_ef_leaves)
                       if have_ef else ef_in)
-            return out_p, out_ef
+            out_m = jax.tree.unflatten(treedef, new_m) if slowmo else m_in
+            out_a = jax.tree.unflatten(treedef, new_a) if slowmo else a_in
+            return out_p, out_ef, out_m, out_a
         return branch
 
-    operands = (params_end, ef)
-    new_params, new_ef = jax.lax.switch(
+    operands = (params_end, ef, mom, anchor)
+    new_params, new_ef, new_m, new_anchor = jax.lax.switch(
         idx % r, [make_branch(rr) for rr in range(r)], operands)
     new_state = dict(sync_state)
     new_state["chunk_idx"] = idx + 1
     if have_ef:
         new_state["ef"] = new_ef
+    if slowmo:
+        new_state["slowmo_m"] = new_m
+        new_state["anchor"] = new_anchor
     return new_params, new_state
 
 

@@ -31,7 +31,16 @@ from repro.sharding import rules_for
 
 
 def build_trainer(cfg: TrainConfig, mesh):
-    """Returns (jitted step_fn, initial state, make_pipeline)."""
+    """Returns (step_fn, initial state, make_pipeline, model, telemetry).
+
+    With ``sync.adaptive`` the step is wrapped in the block-time telemetry
+    hook (host-side timer over the sharded jit — donation and shardings
+    untouched) and ``telemetry`` is a live
+    :class:`repro.core.telemetry.BlockTelemetry`; otherwise ``None``. The
+    driver reports the controller's re-solved H at the end of the run —
+    changing H *mid-run* recompiles the train block (ROADMAP item), so the
+    recommendation feeds the next launch rather than this one.
+    """
     rules = rules_for(cfg.mesh, mesh)
     model = build_model(cfg.model, scan_layers=cfg.scan_layers,
                         remat=cfg.remat)
@@ -52,6 +61,14 @@ def build_trainer(cfg: TrainConfig, mesh):
                          donate_argnums=(0,))
 
     h = cfg.sync.period if use_replicas else 0
+
+    telemetry = None
+    if cfg.sync.adaptive:
+        from repro.core.telemetry import BlockTelemetry
+        telemetry = BlockTelemetry()
+        # wrap the already-sharded/donating jit — jit_step=False keeps it
+        jitted = LS.timed_step(jitted, max(1, h) if use_replicas else 1,
+                               telemetry, jit_step=False)
 
     def make_pipeline(start_step: int):
         pipe = DataPipeline(cfg.data, cfg.model, start_step=start_step)
@@ -76,7 +93,7 @@ def build_trainer(cfg: TrainConfig, mesh):
 
         return Blocked(pipe)
 
-    return jitted, state, make_pipeline, model
+    return jitted, state, make_pipeline, model, telemetry
 
 
 def main() -> None:
@@ -103,7 +120,7 @@ def main() -> None:
                       steps=args.steps)
     cfg = apply_overrides(cfg, args.overrides)
 
-    step, state, make_pipeline, _ = build_trainer(cfg, mesh)
+    step, state, make_pipeline, _, telemetry = build_trainer(cfg, mesh)
     ckpt = CheckpointManager(cfg.checkpoint)
     runner = StepRunner(step, ckpt, cfg.fault, cfg.checkpoint.interval_steps,
                         make_pipeline, fingerprint=config_fingerprint(cfg))
@@ -113,7 +130,7 @@ def main() -> None:
         state, final_step = runner.run(state, 0, cfg.steps)
     dt = time.time() - t0
     losses = [m["loss"] for m in runner.metrics_log]
-    print(json.dumps({
+    out = {
         "arch": model_cfg.name,
         "steps": final_step,
         "wall_s": round(dt, 2),
@@ -121,7 +138,31 @@ def main() -> None:
         "last_loss": round(losses[-1], 4) if losses else None,
         "restarts": runner.restarts,
         "stragglers": len(runner.watchdog.events),
-    }))
+    }
+    if telemetry is not None:
+        # the adaptive re-solve's recommendation for the NEXT launch
+        # (H moves recompile the block, so it isn't applied mid-run). A
+        # single-H run can't split T_step/T_sync from block times alone;
+        # fall back to measured step + analytic sync in that case.
+        from repro.core.autotune import DCN_BW, TuneInputs, choose_period
+        est = telemetry.estimates()
+        t_step = est[0] if est else telemetry.per_step_s()
+        rec = None
+        if t_step:
+            inp = TuneInputs(
+                param_bytes_per_chip=max(1, 4 * cfg.model.param_count()
+                                         // max(1, mesh.devices.size)),
+                replicas=max(2, cfg.mesh.axis_size(cfg.mesh.replica_axis)),
+                step_time_s=t_step, link_bw=DCN_BW,
+                lr=cfg.optimizer.learning_rate)
+            rec = choose_period(
+                inp, cfg.sync,
+                target_overhead=cfg.sync.adapt_target_overhead,
+                max_drift=cfg.sync.adapt_max_drift,
+                sync_time_override=est[1] if est else None)
+        out["adaptive"] = {"telemetry": telemetry.to_dict(),
+                           "recommended_h": rec}
+    print(json.dumps(out))
 
 
 if __name__ == "__main__":

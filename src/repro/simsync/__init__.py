@@ -1,0 +1,21 @@
+"""repro.simsync — trace-calibrated cluster simulator for the sync schedule.
+
+Three layers (see ISSUE 3 / ROADMAP):
+
+* :mod:`repro.simsync.profiles` — cluster hardware models (per-worker
+  compute distributions incl. stragglers, ICI/DCN link α–β).
+* :mod:`repro.simsync.engine` — the discrete-event replay of a full sync
+  schedule (topology × overlap × compression × H) on a profile, grounded
+  in :mod:`repro.core.costmodel` wire bytes; plus the closed-loop driver
+  for :class:`repro.core.autotune.AdaptiveController` and the
+  schedule-level ``oracle_h`` it is graded against.
+* :mod:`repro.simsync.trace` — Chrome-trace export of the timelines.
+"""
+from repro.simsync.engine import (BlockStats, ClusterSim, SimResult,  # noqa: F401
+                                  oracle_h, simulate, simulate_adaptive,
+                                  sync_wire_time_s)
+from repro.simsync.profiles import (PROFILES, ClusterProfile,  # noqa: F401
+                                    LinkProfile, WorkerProfile, dcn_profile,
+                                    get_profile, ici_profile,
+                                    uniform_profile)
+from repro.simsync.trace import chrome_trace, save_chrome_trace  # noqa: F401

@@ -6,8 +6,11 @@ except ImportError:   # optional dev dep: property tests skip
     from conftest import given, settings, st
 
 from repro.config import SyncConfig
-from repro.core.autotune import (TuneInputs, choose_period, drift_cap,
+from repro.core import costmodel
+from repro.core.autotune import (AdaptiveController, TuneInputs,
+                                 choose_period, drift_cap,
                                  predicted_step_time, report, sync_time_s)
+from repro.core.telemetry import BlockTelemetry
 
 
 def _qwen3_2pod():
@@ -77,3 +80,269 @@ def test_choose_period_properties(p, k, step, bw):
     h = choose_period(inp, cfg, target_overhead=0.1, max_drift=0.5)
     assert h >= 1
     assert sync_time_s(inp, cfg) / h / step <= 0.1 * 1.001
+
+
+# ---------------------------------------------------------------------------
+# choose_period monotonicity (ISSUE 3 satellite): H vs bandwidth, topology
+# spectral-gap caps, delayed ≤ blocking
+# ---------------------------------------------------------------------------
+
+def _comm_bound(bw=6.25e9):
+    """Comm-dominated inputs with a loose drift regime (cap ≫ 1)."""
+    return TuneInputs(param_bytes_per_chip=10**9, replicas=8,
+                      step_time_s=1e-3, link_bw=bw,
+                      grad_norm=1e-6, param_norm=1.0, lr=1e-6)
+
+
+class TestChoosePeriodMonotone:
+    def test_h_non_increasing_in_bandwidth(self):
+        """Faster fabric ⇒ smaller T_sync ⇒ the smallest-H-that-helps can
+        only shrink — H is non-increasing in link bandwidth."""
+        ladder = [1e9, 2e9, 6.25e9, 12.5e9, 50e9, 400e9]
+        hs = [choose_period(_comm_bound(bw), SyncConfig(), max_drift=10.0)
+              for bw in ladder]
+        assert hs == sorted(hs, reverse=True), hs
+        assert hs[0] > hs[-1]           # strictly smaller across the range
+
+    @settings(deadline=None, max_examples=40)
+    @given(p=st.integers(10**7, 10**11), k=st.integers(2, 64),
+           step=st.floats(1e-4, 1.0),
+           bw_lo=st.sampled_from([1e9, 6.25e9]),
+           scale=st.floats(1.0, 100.0))
+    def test_h_non_increasing_in_bandwidth_property(self, p, k, step,
+                                                    bw_lo, scale):
+        inp_lo = TuneInputs(param_bytes_per_chip=p, replicas=k,
+                            step_time_s=step, link_bw=bw_lo,
+                            grad_norm=1e-6, param_norm=1.0, lr=1e-6)
+        inp_hi = TuneInputs(param_bytes_per_chip=p, replicas=k,
+                            step_time_s=step, link_bw=bw_lo * scale,
+                            grad_norm=1e-6, param_norm=1.0, lr=1e-6)
+        cfg = SyncConfig()
+        assert (choose_period(inp_hi, cfg, max_drift=10.0)
+                <= choose_period(inp_lo, cfg, max_drift=10.0))
+
+    @pytest.mark.parametrize("topology", ["ring", "pairwise"])
+    def test_gossip_h_capped_by_spectral_gap(self, topology):
+        """In the drift-bound regime a gossip topology's H must equal the
+        blocking cap scaled by its spectral gap 1−λ₂ (sparser mixing ⇒
+        tighter cap), and never exceed the topology='all' H."""
+        inp = TuneInputs(param_bytes_per_chip=10**9, replicas=8,
+                         step_time_s=1e-6, link_bw=1e6,   # comm-starved
+                         grad_norm=1.0, param_norm=1.0, lr=1e-4)
+        h_all = choose_period(inp, SyncConfig(topology="all"),
+                              max_drift=0.05)
+        h_topo = choose_period(inp, SyncConfig(topology=topology),
+                               max_drift=0.05)
+        gap = costmodel.spectral_gap(8, topology)
+        cap = drift_cap(inp, 0.05)
+        assert h_topo <= h_all
+        assert h_topo == max(1, int(cap * gap))
+
+    def test_cap_ordering_follows_spectral_gap(self):
+        """Across topologies at the same K, the drift-bound H must order
+        exactly as the spectral gaps do (slower mixing ⇒ tighter cap) —
+        with topology='all' (gap 1) the loosest."""
+        inp = TuneInputs(param_bytes_per_chip=10**9, replicas=8,
+                         step_time_s=1e-6, link_bw=1e6,
+                         grad_norm=1.0, param_norm=1.0, lr=1e-4)
+        gaps = {t: costmodel.spectral_gap(8, t)
+                for t in ("all", "ring", "pairwise")}
+        hs = {t: choose_period(inp, SyncConfig(topology=t), max_drift=0.05)
+              for t in ("all", "ring", "pairwise")}
+        order_by_gap = sorted(gaps, key=gaps.get)
+        order_by_h = sorted(hs, key=hs.get)
+        assert order_by_gap == order_by_h, (gaps, hs)
+        assert max(hs.values()) == hs["all"]
+
+    @settings(deadline=None, max_examples=40)
+    @given(p=st.integers(10**6, 10**11), k=st.integers(2, 64),
+           step=st.floats(1e-3, 10.0), bw=st.sampled_from([6.25e9, 50e9]))
+    def test_delayed_h_le_blocking_h_property(self, p, k, step, bw):
+        """Delayed overlap only needs the collective to fit under the next
+        block: its H is ≤ the blocking H at equal inputs, always."""
+        inp = TuneInputs(param_bytes_per_chip=p, replicas=k,
+                         step_time_s=step, link_bw=bw,
+                         grad_norm=1e-6, param_norm=1.0, lr=1e-6)
+        h_blk = choose_period(inp, SyncConfig(), max_drift=10.0)
+        h_dly = choose_period(inp, SyncConfig(overlap="delayed"),
+                              max_drift=10.0)
+        assert h_dly <= h_blk
+
+
+# ---------------------------------------------------------------------------
+# telemetry + adaptive controller (ISSUE 3 tentpole, host-side half)
+# ---------------------------------------------------------------------------
+
+class TestBlockTelemetry:
+    def test_direct_estimates(self):
+        t = BlockTelemetry(warmup=0)
+        for _ in range(4):
+            t.record_step_time(2e-3)
+            t.record_sync_time(5e-3)
+        t_step, t_sync = t.estimates()
+        assert t_step == pytest.approx(2e-3)
+        assert t_sync == pytest.approx(5e-3)
+
+    def test_warmup_discards_compile_sample(self):
+        t = BlockTelemetry(warmup=1)
+        t.record_step_time(10.0)       # compile-inflated, dropped
+        t.record_sync_time(10.0)
+        t.record_step_time(1e-3)
+        t.record_sync_time(2e-3)
+        t_step, t_sync = t.estimates()
+        assert t_step == pytest.approx(1e-3)
+        assert t_sync == pytest.approx(2e-3)
+
+    def test_block_regression_separates_step_and_sync(self):
+        """Whole-block times at two H's: y = T_step + T_sync/H recovers
+        both parameters by least squares."""
+        t = BlockTelemetry(warmup=0)
+        t_step, t_sync = 1e-3, 8e-3
+        for h in (4, 32):
+            for _ in range(3):
+                t.record_block(h, h * t_step + t_sync)
+        est = t.estimates()
+        assert est is not None
+        assert est[0] == pytest.approx(t_step, rel=1e-6)
+        assert est[1] == pytest.approx(t_sync, rel=1e-6)
+
+    def test_single_h_insufficient_for_split(self):
+        t = BlockTelemetry(warmup=0)
+        t.record_block(8, 1.0)
+        assert t.estimates() is None
+
+
+def _ctrl(cfg=None, **kw):
+    cfg = cfg or SyncConfig(strategy="periodic")
+    kw.setdefault("param_bytes_per_chip", 10**8)
+    kw.setdefault("replicas", 8)
+    kw.setdefault("lr", 1e-6)
+    return AdaptiveController(cfg, **kw)
+
+
+class TestAdaptiveController:
+    def test_resolves_only_every_adapt_every_blocks(self):
+        c = _ctrl(h0=1, adapt_every=8)
+        c.telemetry._skip_step = c.telemetry._skip_sync = 0
+        for i in range(7):
+            c.observe_block(step_s=1e-3, sync_s=8e-3)
+            assert c.h == 1, i          # cadence not reached yet
+        c.observe_block(step_s=1e-3, sync_s=8e-3)
+        assert c.h > 1                  # 8th block triggered the re-solve
+
+    def test_converges_to_analytic_h(self):
+        """Fed exact (T_step, T_sync) telemetry, the controller lands on
+        choose_period with the measured-sync override."""
+        t_step, t_sync = 1e-3, 8e-3
+        c = _ctrl(h0=1, adapt_every=4)
+        c.telemetry._skip_step = c.telemetry._skip_sync = 0
+        for _ in range(16):
+            c.observe_block(step_s=t_step, sync_s=t_sync)
+        inp = TuneInputs(param_bytes_per_chip=10**8, replicas=8,
+                         step_time_s=t_step, grad_norm=1.0, param_norm=1.0,
+                         lr=1e-6)
+        want = choose_period(inp, SyncConfig(strategy="periodic"),
+                             sync_time_override=t_sync)
+        assert c.h == want
+
+    def test_hysteresis_suppresses_small_moves(self):
+        """A re-solve within the hysteresis band must not move H (every
+        move recompiles the train block on the real path)."""
+        c = _ctrl(h0=100, adapt_every=1, hysteresis=0.25)
+        c.telemetry._skip_step = c.telemetry._skip_sync = 0
+        # measurements that re-solve to 110: |110−100| < 0.25·100 ⇒ hold
+        c.observe_block(step_s=1e-3, sync_s=110 * 0.05 * 1e-3)
+        assert c.h == 100
+        assert c.history == [(0, 100)]
+        # a 4× jump clears the band and moves
+        c.observe_block(step_s=1e-3, sync_s=400 * 0.05 * 1e-3)
+        assert c.h != 100
+        assert len(c.history) == 2
+
+    def test_h_max_clamps_runaway(self):
+        c = _ctrl(h0=1, adapt_every=1, h_max=64)
+        c.telemetry._skip_step = c.telemetry._skip_sync = 0
+        c.observe_block(step_s=1e-6, sync_s=10.0)   # absurd sync time
+        assert c.h == 64
+
+    def test_respects_gossip_spectral_cap(self):
+        """The controller inherits choose_period's guardrails: with a
+        drift-bound regime and a ring topology the re-solved H carries
+        the spectral-gap cap."""
+        cfg = SyncConfig(strategy="periodic", topology="ring")
+        c = _ctrl(cfg=cfg, h0=1, adapt_every=1, lr=1e-2, max_drift=0.05)
+        c.telemetry._skip_step = c.telemetry._skip_sync = 0
+        c._grad_norm.update(1.0)
+        c._param_norm.update(1.0)
+        c.observe_block(step_s=1e-6, sync_s=1.0)    # comm wants huge H
+        inp = TuneInputs(param_bytes_per_chip=10**8, replicas=8,
+                         step_time_s=1e-6, grad_norm=1.0, param_norm=1.0,
+                         lr=1e-2)
+        want = choose_period(inp, cfg, max_drift=0.05,
+                             sync_time_override=1.0)
+        assert c.h == want
+        assert c.h <= drift_cap(inp, 0.05)
+
+    def test_no_move_before_estimates_exist(self):
+        c = _ctrl(h0=4, adapt_every=1)
+        c.observe_block(block_s=1.0)    # single H: split underdetermined
+        assert c.h == 4
+
+
+class TestTelemetryWiring:
+    """The timed paths actually feed BlockTelemetry (ISSUE 3 layer 2)."""
+
+    def test_svm_timed_steps_feed_split_estimates(self):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.core import svm
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh((1,), ("data",))
+        tel = BlockTelemetry(warmup=1)
+        rng = np.random.default_rng(0)
+        xb = jnp.asarray(rng.normal(size=(1, 4, 8)), jnp.float32)
+        yb = jnp.ones((1, 4), jnp.float32)
+        w0 = jnp.zeros(8)
+        with jax.set_mesh(mesh):
+            compute, sync = svm.dms_timed_steps(mesh, "data", block_size=4,
+                                                telemetry=tel)
+            for _ in range(3):
+                wl = compute(w0, xb, yb, jnp.float32(0.5))
+                sync(wl)
+        est = tel.estimates()
+        assert est is not None
+        assert est[0] > 0 and est[1] > 0     # separated T_step / T_sync
+        assert tel.n_syncs == 2              # warmup dropped the first
+
+    def test_local_sgd_train_step_records_blocks(self):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.config import (DataConfig, MeshConfig, OptimizerConfig,
+                                  SyncConfig, TrainConfig, get_smoke)
+        from repro.core import local_sgd as LS
+        from repro.launch.mesh import make_test_mesh
+        from repro.models.registry import build_model
+        mesh = make_test_mesh((1, 1), ("data", "model"))
+        cfg = TrainConfig(
+            model=get_smoke("smollm-360m"),
+            mesh=MeshConfig(shape=(1, 1), axis_names=("data", "model")),
+            sync=SyncConfig(strategy="sync_every_step"),
+            optimizer=OptimizerConfig(name="sgd", learning_rate=0.1),
+            data=DataConfig(seq_len=8, global_batch=2))
+        model = build_model(cfg.model)
+        tel = BlockTelemetry(warmup=1)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, 64, (2, 8)),
+                                       jnp.int32),
+                 "targets": jnp.asarray(rng.integers(0, 64, (2, 8)),
+                                        jnp.int32)}
+        with jax.set_mesh(mesh):
+            state = LS.init_state(model, cfg, jax.random.key(0))
+            step = LS.make_train_step(model, cfg, mesh, telemetry=tel)
+            for _ in range(3):
+                state, _ = step(state, batch)
+        # warmup dropped the compile call; the rest were recorded at H=1
+        assert tel.n_blocks == 2
+

@@ -1,0 +1,273 @@
+"""simsync: discrete-event simulator + adaptive MSF controller (ISSUE 3).
+
+Covers the tentpole's acceptance criteria as property tests:
+* simulated comm time ∝ 1/H with ≥ 10x reduction between the highest- and
+  lowest-MSF schedules on the default DCN profile;
+* the adaptive controller converges within 20% of the simulator's
+  oracle-optimal H on at least two distinct cluster profiles;
+plus schedule semantics (straggler decoupling of gossip vs all-reduce,
+delayed-overlap exposure, chunked wire scaling), determinism, profile
+round-trip, and Chrome-trace validity. Pure numpy — no jax, fast.
+"""
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dev dep: property tests skip
+    from conftest import given, settings, st
+
+from repro.config import SyncConfig
+from repro.core.autotune import AdaptiveController
+from repro.simsync import (PROFILES, ClusterProfile, ClusterSim,
+                           chrome_trace, dcn_profile, ici_profile, oracle_h,
+                           simulate, simulate_adaptive, sync_wire_time_s,
+                           uniform_profile)
+
+CFG = SyncConfig(strategy="periodic")
+
+
+def _quiet_dcn(**kw):
+    """Jitter-free DCN profile: exact comm ∝ 1/H arithmetic."""
+    return dcn_profile(jitter=0.0, name="dcn_quiet", **kw)
+
+
+class TestDeterminismAndProfiles:
+    def test_same_seed_same_result(self):
+        a = simulate(PROFILES["dcn_transient"], CFG, h=8, steps=512, seed=3)
+        b = simulate(PROFILES["dcn_transient"], CFG, h=8, steps=512, seed=3)
+        assert a.wall_clock_s == b.wall_clock_s
+        assert a.comm_exposed_s == b.comm_exposed_s
+
+    def test_profile_dict_roundtrip(self):
+        p = PROFILES["dcn_straggler"]
+        q = ClusterProfile.from_dict(p.to_dict())
+        assert q == p
+
+    def test_pairwise_needs_even_world(self):
+        p = uniform_profile("odd", 3, step_time=1e-3, jitter=0.0,
+                            bandwidth=1e9, latency=0.0, param_bytes=1000)
+        with pytest.raises(ValueError):
+            ClusterSim(p, SyncConfig(strategy="periodic",
+                                     topology="pairwise"))
+
+
+class TestCommVsH:
+    """Acceptance: comm time ∝ 1/H, ≥ 10x reduction on the DCN profile."""
+
+    def test_comm_inverse_in_h_exact_without_jitter(self):
+        prof = _quiet_dcn()
+        steps = 1024
+        ref = simulate(prof, CFG, h=1, steps=steps, seed=0)
+        for h in (2, 4, 8, 16, 32, 64):
+            r = simulate(prof, CFG, h=h, steps=steps, seed=0)
+            # fixed work ⇒ syncs = steps/H ⇒ total comm scales exactly 1/H
+            assert r.comm_exposed_s == pytest.approx(
+                ref.comm_exposed_s / h, rel=1e-9)
+            assert r.comm_wire_s == pytest.approx(
+                ref.comm_wire_s / h, rel=1e-9)
+
+    def test_ge_10x_reduction_on_default_dcn(self):
+        prof = PROFILES["dcn_default"]
+        hi = simulate(prof, CFG, h=1, steps=2048, seed=0)
+        lo = simulate(prof, CFG, h=64, steps=2048, seed=0)
+        assert hi.comm_exposed_s / lo.comm_exposed_s >= 10.0
+        # the paper's 16x–24x regime sits inside the ladder: H=16..24 give
+        # 16x–24x fewer syncs, i.e. comm within ~±jitter of that factor
+        mid = simulate(prof, CFG, h=16, steps=2048, seed=0)
+        assert hi.comm_exposed_s / mid.comm_exposed_s == pytest.approx(
+            16.0, rel=0.25)
+
+    @settings(deadline=None, max_examples=25)
+    @given(h1=st.integers(1, 64), h2=st.integers(1, 64),
+           seed=st.integers(0, 10))
+    def test_comm_ratio_property(self, h1, h2, seed):
+        """For any H pair on the (jitter-free) DCN profile the comm ratio
+        is exactly h2/h1 — the ∝ 1/H law as a property."""
+        prof = _quiet_dcn()
+        a = simulate(prof, CFG, h=h1, steps=512, seed=seed)
+        b = simulate(prof, CFG, h=h2, steps=512, seed=seed)
+        # block counts are floor(steps/h): compare per-executed-sync comm
+        ca = a.comm_exposed_s / a.blocks
+        cb = b.comm_exposed_s / b.blocks
+        assert ca == pytest.approx(cb, rel=1e-9)   # comm per sync constant
+        assert (a.comm_exposed_s * a.steps / a.blocks == pytest.approx(
+            b.comm_exposed_s * b.steps / b.blocks * (a.steps / b.steps),
+            rel=1e-6))
+
+    def test_wall_clock_monotone_nonincreasing_in_h(self):
+        prof = PROFILES["dcn_default"]
+        walls = [simulate(prof, CFG, h=h, steps=2048, seed=0).wall_clock_s
+                 for h in (1, 4, 16, 64)]
+        assert walls == sorted(walls, reverse=True)
+
+
+class TestScheduleSemantics:
+    def test_delayed_exposes_less_than_blocking(self):
+        prof = PROFILES["dcn_default"]
+        for topo in ("all", "ring"):
+            blk = simulate(prof, SyncConfig(strategy="periodic",
+                                            topology=topo), h=16,
+                           steps=1024, seed=0)
+            dly = simulate(prof, SyncConfig(strategy="periodic",
+                                            topology=topo,
+                                            overlap="delayed"), h=16,
+                           steps=1024, seed=0)
+            assert dly.comm_exposed_s < blk.comm_exposed_s
+        # when T_sync < H·T_step the delayed collective fully hides
+        assert dly.comm_exposed_s < 0.05 * dly.compute_s
+
+    def test_chunked_divides_wire_time(self):
+        prof = _quiet_dcn()
+        t_full = sync_wire_time_s(prof, SyncConfig())
+        t_chunk = sync_wire_time_s(prof, SyncConfig(overlap="chunked",
+                                                    chunks=4))
+        # latency is per-collective; the wire term divides by the shards
+        lat = prof.link.latency * 2 * (prof.world - 1)
+        assert (t_chunk - lat) == pytest.approx((t_full - lat) / 4,
+                                                rel=1e-9)
+
+    def test_gossip_wire_time_o1_in_k(self):
+        t8 = sync_wire_time_s(dcn_profile(8, jitter=0.0),
+                              SyncConfig(topology="ring"))
+        t64 = sync_wire_time_s(dcn_profile(64, jitter=0.0),
+                               SyncConfig(topology="ring"))
+        assert t8 == pytest.approx(t64, rel=1e-9)
+
+    def test_straggler_decoupling_gossip_vs_allreduce(self):
+        """ROADMAP's unmeasurable effect: under delayed overlap a transient
+        straggle stalls every worker behind the global barrier but only a
+        decaying neighborhood under gossip — ring/pairwise finish sooner
+        and expose less comm on the dcn_transient profile."""
+        prof = PROFILES["dcn_transient"]
+        res = {}
+        for topo in ("all", "ring", "pairwise"):
+            cfg = SyncConfig(strategy="periodic", topology=topo,
+                             overlap="delayed")
+            res[topo] = simulate(prof, cfg, h=16, steps=4096, seed=0)
+        assert res["ring"].wall_clock_s < res["all"].wall_clock_s
+        assert res["pairwise"].wall_clock_s < res["all"].wall_clock_s
+        assert res["ring"].comm_exposed_s < res["all"].comm_exposed_s
+
+    def test_blocking_all_reduce_inherits_straggler_every_block(self):
+        """One persistently 4× slower worker: every all-reduce barrier
+        waits for it, so mean exposed wait per block ≈ its extra compute."""
+        prof = PROFILES["dcn_straggler"]
+        h = 8
+        r = simulate(prof, SyncConfig(strategy="periodic"), h=h,
+                     steps=1024, seed=0)
+        extra = 3.0 * h * prof.workers[0].step_time   # (4−1)·H·t_step
+        per_block_wait = r.comm_exposed_s / r.blocks
+        assert per_block_wait == pytest.approx(
+            extra * 7 / 8 + sync_wire_time_s(prof, CFG), rel=0.15)
+
+
+class TestAdaptiveController:
+    """Acceptance: controller within 20% of the simulator oracle on ≥ 2
+    distinct profiles."""
+
+    @pytest.mark.parametrize("name", ["dcn_default", "ici_pod"])
+    def test_converges_within_20pct_of_oracle(self, name):
+        prof = PROFILES[name]
+        oh = oracle_h(prof, CFG, target_overhead=0.05, steps=2048, seed=0)
+        ctrl = AdaptiveController(
+            CFG, param_bytes_per_chip=prof.param_bytes,
+            replicas=prof.world, link_bw=prof.link.bandwidth, h0=1,
+            adapt_every=8, lr=1e-6)
+        simulate_adaptive(prof, CFG, ctrl, blocks=200, seed=1)
+        assert abs(ctrl.h - oh) <= 0.2 * oh, (ctrl.h, oh, ctrl.history)
+
+    def test_straggler_profile_converges_exactly(self):
+        """The host-observed calibration pair (slowest-shard compute +
+        barrier-free collective) makes the persistent-straggler re-solve
+        land on the oracle instead of chasing its own barrier wait."""
+        prof = PROFILES["dcn_straggler"]
+        oh = oracle_h(prof, CFG, target_overhead=0.05, steps=2048, seed=0)
+        ctrl = AdaptiveController(
+            CFG, param_bytes_per_chip=prof.param_bytes,
+            replicas=prof.world, link_bw=prof.link.bandwidth, h0=1,
+            adapt_every=8, lr=1e-6)
+        simulate_adaptive(prof, CFG, ctrl, blocks=200, seed=1)
+        assert abs(ctrl.h - oh) <= 0.2 * oh, (ctrl.h, oh)
+
+    @settings(deadline=None, max_examples=10)
+    @given(seed=st.integers(0, 1000))
+    def test_convergence_property_over_seeds(self, seed):
+        """Any measurement-noise realization lands within 20% of oracle on
+        both graded profiles (the acceptance bar as a property)."""
+        for prof in (PROFILES["dcn_default"], PROFILES["ici_pod"]):
+            oh = oracle_h(prof, CFG, target_overhead=0.05, steps=2048,
+                          seed=0)
+            ctrl = AdaptiveController(
+                CFG, param_bytes_per_chip=prof.param_bytes,
+                replicas=prof.world, link_bw=prof.link.bandwidth, h0=1,
+                adapt_every=8, lr=1e-6)
+            simulate_adaptive(prof, CFG, ctrl, blocks=160, seed=seed)
+            assert abs(ctrl.h - oh) <= 0.2 * oh, (prof.name, ctrl.h, oh)
+
+    def test_history_records_transitions_and_h_bounded(self):
+        prof = PROFILES["dcn_default"]
+        ctrl = AdaptiveController(
+            CFG, param_bytes_per_chip=prof.param_bytes,
+            replicas=prof.world, link_bw=prof.link.bandwidth, h0=1,
+            adapt_every=4, lr=1e-6, h_max=64)
+        simulate_adaptive(prof, CFG, ctrl, blocks=64, seed=0)
+        assert ctrl.history[0] == (0, 1)
+        assert len(ctrl.history) >= 2          # it moved at least once
+        assert all(1 <= h <= 64 for _, h in ctrl.history)
+
+
+class TestChromeTrace:
+    def test_trace_structure_and_monotone_slices(self):
+        prof = PROFILES["dcn_straggler"]
+        r = simulate(prof, SyncConfig(strategy="periodic", topology="ring",
+                                      overlap="delayed"), h=4, blocks=8,
+                     seed=0, record_timeline=True)
+        doc = chrome_trace(r)
+        assert "traceEvents" in doc
+        evs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+        assert evs, "no slices recorded"
+        for e in evs:
+            assert e["dur"] >= 0.0
+            assert set(e) >= {"name", "ts", "dur", "pid", "tid", "cat"}
+        # compute slices of one worker never overlap (its own timeline)
+        per_worker = {}
+        for s in r.timeline:
+            if s.kind == "compute":
+                per_worker.setdefault(s.worker, []).append((s.start, s.end))
+        for spans in per_worker.values():
+            spans.sort()
+            for (s0, e0), (s1, _) in zip(spans, spans[1:]):
+                assert s1 >= e0 - 1e-12
+        # JSON-serializable end to end
+        json.dumps(doc)
+
+    def test_trace_has_stalls_only_under_delayed(self):
+        prof = _quiet_dcn()
+        blk = simulate(prof, SyncConfig(strategy="periodic"), h=4,
+                       blocks=6, seed=0, record_timeline=True)
+        kinds = {s.kind for s in blk.timeline}
+        assert kinds == {"compute", "sync"}
+
+
+class TestOracle:
+    def test_oracle_meets_its_own_budget(self):
+        prof = PROFILES["dcn_default"]
+        oh = oracle_h(prof, CFG, target_overhead=0.05, steps=2048, seed=0)
+        floor = simulate(prof, CFG, h=1024, steps=2048, seed=0).per_step_s
+        at = simulate(prof, CFG, h=oh, steps=2048, seed=0).per_step_s
+        assert at <= 1.05 * floor * (1 + 1e-6)
+        if oh > 1:
+            below = simulate(prof, CFG, h=oh - 1, steps=2048,
+                             seed=0).per_step_s
+            assert below > 1.05 * floor
+
+    def test_oracle_smaller_on_faster_fabric(self):
+        """Same compute, 8× the bandwidth ⇒ the oracle H shrinks."""
+        slow = dcn_profile(jitter=0.0, name="slow")
+        fast = ici_profile(step_time=2e-3, jitter=0.0, name="fast")
+        h_slow = oracle_h(slow, CFG, steps=1024, seed=0)
+        h_fast = oracle_h(fast, CFG, steps=1024, seed=0)
+        assert h_fast < h_slow
