@@ -397,21 +397,41 @@ def gossip_sweep() -> List[str]:
                          step_time_s=1e-6, link_bw=1e6,
                          grad_norm=1.0, param_norm=1.0, lr=1e-3)
 
-        def acc_at(topo, h):
-            w = svm.dms(w0, ds.x_train, ds.y_train, workers=k,
-                        epochs=EPOCHS, block_size=h, topology=topo)
-            return float(svm.accuracy(w, xcv, ycv))
+        acc_cache = {}
 
-        for topo in ("all", "ring", "pairwise"):
-            cfg = SyncConfig(strategy="periodic", topology=topo)
+        def acc_at(topo, h, gossip_async=False):
+            # memoized: the topology="all" reference at a given H is
+            # retrained once, not once per gossip row that shares the H
+            key = (topo, h, gossip_async)
+            if key not in acc_cache:
+                w = svm.dms(w0, ds.x_train, ds.y_train, workers=k,
+                            epochs=EPOCHS, block_size=h, topology=topo,
+                            gossip_async=gossip_async)
+                acc_cache[key] = float(svm.accuracy(w, xcv, ycv))
+            return acc_cache[key]
+
+        # async-vs-sync comparison rows: each gossip topology also trains
+        # with the unsynchronized-round exchange at ITS tuned H (the
+        # staleness-aware spectral-gap cap picks a smaller H), compared
+        # against topology="all" at the same H
+        for topo, gossip_async in (("all", False), ("ring", False),
+                                   ("ring", True), ("pairwise", False),
+                                   ("pairwise", True)):
+            cfg = SyncConfig(strategy="periodic", topology=topo,
+                             gossip_async=gossip_async)
             h = choose_period(inp, cfg, target_overhead=0.05, max_drift=0.05)
-            acc = acc_at(topo, h)
+            acc = acc_at(topo, h, gossip_async)
             acc_ref = acc if topo == "all" else acc_at("all", h)
+            mode = f"{topo}{'_async' if gossip_async else ''}"
             rows.append({"section": "acc", "dataset": dataset,
-                         "topology": topo, "H": h, "cv_acc": acc,
-                         "spectral_gap": costmodel.spectral_gap(k, topo),
+                         "topology": topo, "gossip_async": gossip_async,
+                         "H": h, "cv_acc": acc,
+                         "spectral_gap": costmodel.effective_spectral_gap(
+                             k, topo, staleness=1 if gossip_async else 0)
+                         if topo != "all"
+                         else costmodel.spectral_gap(k, topo),
                          "delta_vs_all_same_h": acc - acc_ref})
-            lines.append(f"gossip_sweep,acc,{dataset} topo={topo} H={h},"
+            lines.append(f"gossip_sweep,acc,{dataset} topo={mode} H={h},"
                          f"{acc:.4f} (Δ@H={acc - acc_ref:+.4f})")
 
     # --- 3) measured per-sync time on a host mesh ----------------------
@@ -450,20 +470,30 @@ def gossip_sweep_timing() -> List[str]:
     cnt = jnp.zeros((), jnp.int32)
     lines, rows = [], []
     with jax.set_mesh(mesh):
-        for topo in ("all", "ring", "pairwise"):
+        for topo, gossip_async in (("all", False), ("ring", False),
+                                   ("ring", True), ("pairwise", False),
+                                   ("pairwise", True)):
             _, sync = svm.dms_timed_steps(mesh, "data", block_size=8,
-                                          topology=topo)
-            run = ((lambda: sync(w_locals)) if topo == "all"
-                   else (lambda: sync(w_locals, cnt)))
+                                          topology=topo,
+                                          gossip_async=gossip_async)
+            if gossip_async:
+                sent, mixbuf = svm.dms_async_buffers_init(w_locals, topo)
+                run = lambda: sync(w_locals, sent, mixbuf, cnt)
+            elif topo == "all":
+                run = lambda: sync(w_locals)
+            else:
+                run = lambda: sync(w_locals, cnt)
             jax.block_until_ready(run())
             best = float("inf")
             for _ in range(20):
                 t0 = time.perf_counter()
                 jax.block_until_ready(run())
                 best = min(best, time.perf_counter() - t0)
+            mode = f"{topo}{'_async' if gossip_async else ''}"
             rows.append({"section": "sync_us", "topology": topo,
+                         "gossip_async": gossip_async,
                          "K": k, "d": d, "sync_us": best * 1e6})
-            lines.append(f"gossip_sweep,sync_us,K={k} topo={topo},"
+            lines.append(f"gossip_sweep,sync_us,K={k} topo={mode},"
                          f"{best*1e6:.1f}")
     _save("gossip_sweep_timing", rows)
     return lines

@@ -13,6 +13,13 @@ in the same cost-model wire bytes as the real engine. Four sections:
              all-reduce vs ring/pairwise gossip under delayed overlap on
              the dcn_transient profile (ROADMAP's "what the 2-core host
              cannot measure").
+  async    — unsynchronized-round gossip (``gossip_async``): the
+             ``async_decoupling`` acceptance row compares the *clean-block*
+             mean time (blocks whose worker did not itself straggle) on
+             dcn_transient against the straggler-free profile — async must
+             sit within 5% of it while the synchronized ring inherits its
+             neighbors' straggles and degrades. Per-mode async-vs-sync
+             rows land in the comm grid as ``overlap="async"``.
   adaptive — closed-loop AdaptiveController convergence vs the simulator's
              oracle-optimal H on distinct cluster profiles, with the
              (block, H) trajectory.
@@ -90,12 +97,20 @@ def run() -> List[str]:
     os.makedirs(record.OUT_DIR, exist_ok=True)
 
     # --- 1) comm time vs H: topology × overlap grid on the DCN profile --
+    # (gossip topologies get an extra "async" mode row — the
+    # unsynchronized-round exchange — so every async-vs-sync comparison
+    # is one grid lookup away)
     prof = PROFILES["dcn_default"]
     for topo in ("all", "ring", "pairwise"):
-        for overlap in ("none", "delayed", "chunked"):
+        modes = ("none", "delayed", "chunked")
+        if topo != "all":
+            modes += ("async",)
+        for overlap in modes:
+            cfg = SyncConfig(strategy="periodic", topology=topo,
+                             overlap="none" if overlap == "async"
+                             else overlap,
+                             gossip_async=overlap == "async")
             for h in H_LADDER:
-                cfg = SyncConfig(strategy="periodic", topology=topo,
-                                 overlap=overlap)
                 r = simulate(prof, cfg, h=h, steps=STEPS, seed=SEED)
                 rows.append({"section": "comm", "profile": prof.name,
                              "topology": topo, "overlap": overlap, "H": h,
@@ -130,6 +145,52 @@ def run() -> List[str]:
     lines.append(f"simsync_sweep,straggler_decoupling,ring_vs_all,"
                  f"{wall['all'] / wall['ring']:.3f}x")
 
+    # --- 2b) async (unsynchronized-round) gossip decoupling -------------
+    # clean-block mean = mean block time over (worker, block) samples whose
+    # worker did NOT itself draw a transient straggle. Each mode is
+    # compared against ITS OWN run on the straggler-free profile, so the
+    # ratio isolates what the transient stragglers leak into clean blocks
+    # (not the mode's inherent scheduling overhead): async gossip must
+    # stay within 5% of its straggler-free self while the synchronized
+    # ring's clean blocks inherit the neighborhood's straggles.
+    ratios = {}
+    for label, cfg_a in (
+            ("async_ring", SyncConfig(strategy="periodic", topology="ring",
+                                      gossip_async=True)),
+            ("sync_ring", SyncConfig(strategy="periodic", topology="ring",
+                                     overlap="delayed"))):
+        base = simulate(PROFILES["dcn_default"], cfg_a, h=16,
+                        steps=2 * STEPS, seed=SEED)
+        r = simulate(pt, cfg_a, h=16, steps=2 * STEPS, seed=SEED)
+        ratios[label] = (r.clean_block_mean_s / base.clean_block_mean_s,
+                         base, r)
+        rows.append({"section": "async", "profile": pt.name,
+                     "mode": label, "H": 16,
+                     "clean_block_base_s": base.clean_block_mean_s,
+                     **{k: v for k, v in r.summary().items()
+                        if k not in ("profile", "sync")}})
+        lines.append(f"simsync_sweep,async,{label},"
+                     f"clean_block_ms={r.clean_block_mean_s*1e3:.3f} "
+                     f"base_ms={base.clean_block_mean_s*1e3:.3f} "
+                     f"wall={r.wall_clock_s:.3f} "
+                     f"stale_mean={r.stale_rounds_mean:.2f}")
+    async_ratio = ratios["async_ring"][0]
+    sync_ratio = ratios["sync_ring"][0]
+    rows.append({"section": "async_decoupling", "profile": pt.name,
+                 "H": 16,
+                 "baseline_profile": "dcn_default",
+                 "async_clean_block_s":
+                     ratios["async_ring"][2].clean_block_mean_s,
+                 "sync_ring_clean_block_s":
+                     ratios["sync_ring"][2].clean_block_mean_s,
+                 "async_clean_ratio": async_ratio,
+                 "sync_ring_clean_ratio": sync_ratio,
+                 "async_stale_rounds_mean":
+                     ratios["async_ring"][2].stale_rounds_mean})
+    lines.append(f"simsync_sweep,async_decoupling,"
+                 f"async={async_ratio:.4f}x sync_ring={sync_ratio:.3f}x,"
+                 f"{'OK' if async_ratio <= 1.05 < sync_ratio else 'FAIL'}")
+
     # --- 3) adaptive controller vs the simulator oracle -----------------
     cfg = SyncConfig(strategy="periodic")
     for name in ("dcn_default", "ici_pod", "dcn_straggler"):
@@ -149,14 +210,20 @@ def run() -> List[str]:
                      f"ctrl={ctrl.h} rel={rel:.3f}")
 
     # --- 4) artifacts: chrome traces + the Figs 13–15 SVG ---------------
-    for topo in ("all", "ring"):
-        cfg_t = SyncConfig(strategy="periodic", topology=topo,
-                           overlap="delayed")
+    # (ring_async lanes show sends running under the next block's compute
+    # with no stall lane at all — vs ring's one-hop-per-round stalls and
+    # all's global barrier)
+    for name_t, cfg_t in (
+            ("all", SyncConfig(strategy="periodic", overlap="delayed")),
+            ("ring", SyncConfig(strategy="periodic", topology="ring",
+                                overlap="delayed")),
+            ("ring_async", SyncConfig(strategy="periodic", topology="ring",
+                                      gossip_async=True))):
         r = simulate(pt, cfg_t, h=16, blocks=24, seed=SEED,
                      record_timeline=True)
-        path = os.path.join(record.OUT_DIR, f"simsync_trace_{topo}.json")
+        path = os.path.join(record.OUT_DIR, f"simsync_trace_{name_t}.json")
         save_chrome_trace(path, r)
-        lines.append(f"simsync_sweep,trace,{topo},{path}")
+        lines.append(f"simsync_sweep,trace,{name_t},{path}")
     svg = _svg_comm_vs_h(rows, os.path.join(record.OUT_DIR,
                                             "simsync_comm_vs_h.svg"))
     lines.append(f"simsync_sweep,figure,comm_vs_h,{svg}")

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 
 @dataclass(frozen=True)
@@ -162,6 +162,16 @@ class SyncConfig:
     overlap: str = "none"          # none | delayed | chunked
     chunks: int = 4                # R — shard count for overlap="chunked"
     topology: str = "all"          # all | ring | pairwise (gossip)
+    # Asynchronous (unsynchronized-round) gossip: each replica mixes with
+    # the *last received* neighbor model instead of the current-round one —
+    # a double-buffered ppermute exchange (send this boundary, consume at
+    # the next, bounded staleness = 1 round on the compiled path). Requires
+    # a gossip topology; the exchange is already a full block off the
+    # critical path, so overlap modes are rejected (they would compound the
+    # staleness past the 1-round bound). The auto-tuner caps H by the
+    # staleness-aware effective spectral gap
+    # (:func:`repro.core.costmodel.effective_spectral_gap`).
+    gossip_async: bool = False
     # --- adaptive MSF (repro.core.autotune.AdaptiveController) ---------
     # When ``adaptive`` is on, the training driver re-solves the period
     # online from measured T_step/T_sync every ``adapt_every`` blocks
@@ -179,6 +189,8 @@ class SyncConfig:
         tail = "" if self.overlap == "none" else f",overlap={self.overlap}"
         if self.topology != "all":
             tail += f",topo={self.topology}"
+        if self.gossip_async:
+            tail += ",async"
         if self.adaptive:
             tail += ",adaptive"
         return f"{self.strategy}(H={self.period},comp={self.compression}{tail})"

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import argparse
-from typing import Any, List, Sequence
+from typing import Any, Sequence
 
 from repro.config.base import TrainConfig, replace
 

@@ -32,6 +32,16 @@ SYNC_PRESETS: Dict[str, SyncConfig] = {
     "gossip_ring_int16": SyncConfig(strategy="periodic", period=64,
                                     topology="ring", overlap="delayed",
                                     compression="int16"),
+    # asynchronous (unsynchronized-round) gossip (ISSUE 4): double-buffered
+    # ppermute exchange — each replica mixes with the last *received*
+    # neighbor snapshot (bounded staleness = 1 round), so a transient
+    # straggler delays only itself. overlap stays "none": the exchange is
+    # already a full block off the critical path by construction.
+    "gossip_ring_async": SyncConfig(strategy="periodic", period=64,
+                                    topology="ring", gossip_async=True),
+    "gossip_pairwise_async": SyncConfig(strategy="periodic", period=64,
+                                        topology="pairwise",
+                                        gossip_async=True),
     # hierarchical flavor: every-step data-axis sync, gossip across pods
     "hierarchical_gossip_ring": SyncConfig(strategy="hierarchical",
                                            period=64, topology="ring",

@@ -112,7 +112,10 @@ def choose_period(inp: TuneInputs, cfg: Optional[SyncConfig] = None, *,
               else sync_time_s(inp, cfg))
     if t_sync <= 0 or inp.step_time_s <= 0:
         return 1
-    if cfg.overlap == "delayed":
+    if cfg.overlap == "delayed" or cfg.gossip_async:
+        # the collective runs under the next block's compute (async gossip
+        # has a full block of slack by construction) and is exposed only
+        # when it outlasts the block plus the overhead allowance
         denom = (1.0 + target_overhead) * inp.step_time_s
     else:
         denom = target_overhead * inp.step_time_s
@@ -128,7 +131,12 @@ def choose_period(inp: TuneInputs, cfg: Optional[SyncConfig] = None, *,
         # the same consensus takes ~1/(1−λ₂) rounds — the effective
         # averaging period is H/(1−λ₂) and the drift cap must bind H at
         # gap·cap. The gossip analog of the chunked ``cap // chunks``.
-        gap = costmodel.spectral_gap(max(2, inp.replicas), cfg.topology)
+        # Async gossip additionally mixes 1-round-stale snapshots, which
+        # widens the unmixed-drift window by the staleness — the
+        # staleness-aware gap halves the cap for the 1-round double buffer.
+        gap = costmodel.effective_spectral_gap(
+            max(2, inp.replicas), cfg.topology,
+            staleness=1 if cfg.gossip_async else 0)
         cap = max(1, int(cap * gap))
     h = max(1, min(h_comm, cap))
     return h

@@ -154,6 +154,27 @@ def spectral_gap(world: int, topology: str) -> float:
     return 1.0 - gossip_lambda2(world, topology)
 
 
+def effective_spectral_gap(world: int, topology: str, *,
+                           staleness: int = 0) -> float:
+    """Staleness-aware consensus gain of a gossip round.
+
+    Async (unsynchronized-round) gossip mixes snapshots that are
+    ``staleness`` rounds old. The drift-free contraction *rate* is
+    unchanged — with zero local drift the double-buffered recurrence
+    collapses to synchronous gossip ``staleness`` rounds behind
+    (``w_t = M w_{t−1}``, tested in test_async_gossip) — but each block's
+    local drift now waits ``staleness`` extra rounds before its first
+    mixing, so the unmixed-drift window grows from ``H/gap`` steps to
+    ``(1+staleness)·H/gap``. The drift guardrail scales its cap by the
+    gap, so charging staleness as ``gap/(1+s)`` makes the effective
+    averaging period — and therefore the H cap — account for the stale
+    round exactly. ``staleness=0`` is the synchronous gossip gap.
+    """
+    if staleness < 0:
+        raise ValueError(f"staleness must be >= 0, got {staleness}")
+    return spectral_gap(world, topology) / (1.0 + staleness)
+
+
 def overlapped_step_time(step_time_s: float, sync_time_s: float, h: int,
                          cfg: SyncConfig) -> float:
     """Per-optimizer-step wall clock under the configured overlap mode.
@@ -161,11 +182,13 @@ def overlapped_step_time(step_time_s: float, sync_time_s: float, h: int,
     * blocking (``none``/``chunked``): ``T_step + T_sync/H`` — the collective
       sits on the critical path at every block boundary (chunked has already
       shrunk ``T_sync`` by the shard count via the wire-bytes model).
-    * ``delayed``: ``max(T_step·H, T_sync)/H`` — the collective runs
-      concurrently with the next block's H steps of compute and is exposed
-      only when it outlasts them.
+    * ``delayed`` — and ``gossip_async``, whose double-buffered exchange is
+      a full block ahead of its consumer by construction:
+      ``max(T_step·H, T_sync)/H`` — the collective runs concurrently with
+      the next block's H steps of compute and is exposed only when it
+      outlasts them.
     """
     h = max(1, h)
-    if cfg.overlap == "delayed":
+    if cfg.overlap == "delayed" or cfg.gossip_async:
         return max(step_time_s * h, sync_time_s) / h
     return step_time_s + sync_time_s / h

@@ -43,9 +43,8 @@ collective).
 """
 from __future__ import annotations
 
-import functools
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -296,10 +295,14 @@ def finalize_state(state, cfg: TrainConfig):
                                            new_sync["pending"])
     if "ef" in new_sync:
         new_sync["ef"] = jax.tree.map(jnp.zeros_like, new_sync["ef"])
-    return {**state,
-            "params": S.flush_overlap(state["params"], state["sync"],
-                                      cfg.sync),
-            "sync": new_sync}
+    flushed = S.flush_overlap(state["params"], state["sync"], cfg.sync)
+    if "sent" in new_sync:
+        # re-seed the async double buffers from the flushed model so a
+        # resume applies a zero stale correction at its first boundary
+        # (all replicas restart identical — the same seed as init)
+        new_sync["sent"], new_sync["mixbuf"] = S.init_async_buffers(
+            flushed, cfg.sync.topology)
+    return {**state, "params": flushed, "sync": new_sync}
 
 
 def make_train_step(model, cfg: TrainConfig, mesh: Mesh,

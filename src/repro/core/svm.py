@@ -60,7 +60,7 @@ analyzes; the ``shard_map`` backend emits real ``ppermute``s.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -191,16 +191,20 @@ def _shard_data(x: np.ndarray, y: np.ndarray, k: int):
 
 @functools.partial(jax.jit,
                    static_argnames=("epochs", "block_size", "c", "grad_impl",
-                                    "overlap", "chunks", "topology"))
+                                    "overlap", "chunks", "topology",
+                                    "gossip_async"))
 def _dms_vmap(w0, xs, ys, *, epochs: int, block_size: int, c: float,
               grad_impl: str, overlap: str = "none", chunks: int = 4,
-              topology: str = "all"):
+              topology: str = "all", gossip_async: bool = False):
     """K simulated workers: xs (K, n_local, d). Every worker holds its own
     w between syncs; sync = mean over the worker dim after each block
     (blocking), stale-by-one (delayed) or one w-segment per block (chunked).
     ``topology != "all"`` replaces the worker mean with the static gossip
     mixing matrix (``w ← M w``, M from costmodel.mixing_matrices — the same
-    matrices whose λ₂ the auto-tuner's guardrail reads)."""
+    matrices whose λ₂ the auto-tuner's guardrail reads). ``gossip_async``
+    mixes the *last transmitted* snapshot instead of the current one: the
+    boundary applies the carried stale correction, then banks
+    ``M·(post-correction w) − w`` for the next boundary."""
     k, n_local, d = xs.shape
     nb = n_local // block_size
     xb = xs[:, : nb * block_size].reshape(k, nb, block_size, d)
@@ -229,8 +233,8 @@ def _dms_vmap(w0, xs, ys, *, epochs: int, block_size: int, c: float,
             alpha = 1.0 / (1.0 + t.astype(w0.dtype))
 
             def block(carry, xy):
-                # carry: (wk, pending, cnt) under delayed, (wk, cnt) else —
-                # the (K, dp) pending buffer only exists where it is read
+                # carry: (wk, pending, cnt) under delayed/async, (wk, cnt)
+                # else — the (K, dp) pending buffer only exists where read
                 wk, cnt = (carry[0], carry[-1])
                 xblk, yblk = xy
                 grads = jax.vmap(
@@ -239,6 +243,14 @@ def _dms_vmap(w0, xs, ys, *, epochs: int, block_size: int, c: float,
                 )(wk, xblk, yblk)
                 w_end = wk - alpha * (grads if dp == d else
                                       jnp.pad(grads, ((0, 0), (0, dp - d))))
+                if gossip_async:
+                    # apply the stale correction banked at the previous
+                    # boundary, then bank M·(post-correction snapshot) − it
+                    # for the next one — the double-buffered exchange as a
+                    # matrix recurrence (zero drift ⇒ w_t = M w_{t−1})
+                    new_w = w_end + carry[1]
+                    g = mix(new_w, cnt) - new_w
+                    return (new_w, g, cnt + 1), None
                 if overlap == "none":
                     return (mix(w_end, cnt), cnt + 1), None
                 if delayed:
@@ -259,8 +271,8 @@ def _dms_vmap(w0, xs, ys, *, epochs: int, block_size: int, c: float,
         wk0 = jnp.zeros((k, dp), w0.dtype).at[:, :d].set(
             jnp.broadcast_to(w0, (k, d)))
         cnt0 = jnp.zeros((), jnp.int32)
-        carry0 = ((wk0, jnp.zeros((k, dp), w0.dtype), cnt0) if delayed
-                  else (wk0, cnt0))
+        carry0 = ((wk0, jnp.zeros((k, dp), w0.dtype), cnt0)
+                  if (delayed or gossip_async) else (wk0, cnt0))
         carry, _ = jax.lax.scan(epoch, carry0, jnp.arange(epochs))
         # flush: the worker mean is invariant under doubly stochastic
         # mixing — the exact consensus target
@@ -338,7 +350,8 @@ def _dms_vmap(w0, xs, ys, *, epochs: int, block_size: int, c: float,
 
 
 def _make_worker_block(axis: str, *, c: float, grad_impl: str, overlap: str,
-                       chunks: int, d: int, topology: str = "all"):
+                       chunks: int, d: int, topology: str = "all",
+                       gossip_async: bool = False):
     """One worker's block (compute + boundary sync), inside shard_map with
     ``axis`` manual. ``carry`` is a dict per overlap mode:
 
@@ -357,9 +370,19 @@ def _make_worker_block(axis: str, *, c: float, grad_impl: str, overlap: str,
     boundary's correction; this boundary's collective output feeds only
     ``pending``, so it is not on this or the next block's compute critical
     path.
+
+    ``gossip_async`` (gossip only, ``overlap="none"``) double-buffers the
+    exchange: carry gains ``sent``/``mixbuf`` (the snapshot transmitted at
+    the previous boundary and the neighbor payloads received there); the
+    boundary applies the stale correction ``mixbuf + M_ii·sent − sent``
+    first, then ppermutes the post-correction model into the buffers for
+    the *next* boundary — a worker never consumes a neighbor's
+    current-round value.
     """
     from repro.core import sync as _sync
     gossip = topology != "all"
+    if gossip_async:
+        assert gossip and overlap == "none", (topology, overlap)
 
     def exchange(v, cnt):
         """Boundary exchange: global mean, or topology neighbor mix."""
@@ -374,6 +397,14 @@ def _make_worker_block(axis: str, *, c: float, grad_impl: str, overlap: str,
 
     def block(carry, xblk, yblk, alpha):
         cnt = carry.get("cnt")
+        if gossip_async:
+            w = carry["w"]
+            w_self = _sync.gossip_self_weight(topology)
+            w_end = w - alpha * block_grad(w, xblk, yblk, c, grad_impl)
+            new_w = (w_end + carry["mixbuf"]
+                     + (w_self - 1.0) * carry["sent"])
+            recv = _sync.gossip_recv(new_w, axis, topology, round_idx=cnt)
+            return bump({"w": new_w, "sent": new_w, "mixbuf": recv}, carry)
         if overlap == "none":
             w = carry["w"]
             w_local = w - alpha * block_grad(w, xblk, yblk, c, grad_impl)
@@ -408,10 +439,14 @@ def _needs_round(overlap: str, topology: str) -> bool:
     return topology == "pairwise" and overlap != "chunked"
 
 
-def _carry_init(w0, *, overlap: str, chunks: int, topology: str = "all"):
+def _carry_init(w0, *, overlap: str, chunks: int, topology: str = "all",
+                gossip_async: bool = False):
     """Initial per-worker carry (local, no leading worker dim)."""
     d = w0.shape[0]
-    if overlap == "none":
+    if gossip_async:
+        sent, mixbuf = dms_async_buffers_init(w0, topology)
+        carry = {"w": w0, "sent": sent, "mixbuf": mixbuf}
+    elif overlap == "none":
         carry = {"w": w0}
     elif overlap == "delayed":
         carry = {"w": w0, "pending": jnp.zeros((d,), w0.dtype)}
@@ -440,7 +475,7 @@ def _carry_flush(carry, axis: str, *, overlap: str, d: int,
 def _dms_shard_map(w0, xs, ys, *, epochs: int, block_size: int, c: float,
                    grad_impl: str, mesh, axis: str = "data",
                    overlap: str = "none", chunks: int = 4,
-                   topology: str = "all"):
+                   topology: str = "all", gossip_async: bool = False):
     """Real collectives: workers = mesh axis shards; sync = lax.pmean
     (``topology="all"``) or lax.ppermute neighbor mixing (gossip)."""
     k = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
@@ -456,7 +491,8 @@ def _dms_shard_map(w0, xs, ys, *, epochs: int, block_size: int, c: float,
         yb = y_local[: nb * block_size].reshape(nb, block_size)
         blockfn = _make_worker_block(axis, c=c, grad_impl=grad_impl,
                                      overlap=overlap, chunks=chunks, d=d,
-                                     topology=topology)
+                                     topology=topology,
+                                     gossip_async=gossip_async)
 
         def epoch(carry, t):
             alpha = 1.0 / (1.0 + t.astype(w.dtype))
@@ -467,7 +503,8 @@ def _dms_shard_map(w0, xs, ys, *, epochs: int, block_size: int, c: float,
 
         carry, _ = jax.lax.scan(epoch, _carry_init(w, overlap=overlap,
                                                    chunks=chunks,
-                                                   topology=topology),
+                                                   topology=topology,
+                                                   gossip_async=gossip_async),
                                 jnp.arange(epochs))
         return _carry_flush(carry, axis, overlap=overlap, d=d,
                             topology=topology)
@@ -482,24 +519,32 @@ def dms(w0: jax.Array, x: np.ndarray, y: np.ndarray, *, workers: int,
         epochs: int, block_size: int, c: float = 1.0,
         grad_impl: str = "jnp", backend: str = "vmap",
         mesh=None, axis: str = "data", overlap: str = "none",
-        chunks: int = 4, topology: str = "all") -> jax.Array:
+        chunks: int = 4, topology: str = "all",
+        gossip_async: bool = False) -> jax.Array:
     """Algorithm 3 entry point. ``block_size`` is points per worker per sync
     (the paper's MSF knob: larger block ⇒ lower sync frequency);
     ``overlap`` ∈ {"none", "delayed", "chunked"} selects how the residual
     sync is taken off the critical path and ``topology`` ∈ {"all", "ring",
-    "pairwise"} which workers it couples (module docstring)."""
+    "pairwise"} which workers it couples (module docstring);
+    ``gossip_async`` switches a gossip topology to the double-buffered
+    unsynchronized-round exchange (requires ``overlap="none"``)."""
+    if gossip_async and (topology == "all" or overlap != "none"):
+        raise ValueError("gossip_async needs a gossip topology and "
+                         f"overlap='none'; got topology={topology!r}, "
+                         f"overlap={overlap!r}")
     xs, ys = _shard_data(np.asarray(x), np.asarray(y), workers)
     xs, ys = jnp.asarray(xs), jnp.asarray(ys)
     if backend == "vmap":
         return _dms_vmap(w0, xs, ys, epochs=epochs, block_size=block_size,
                          c=c, grad_impl=grad_impl, overlap=overlap,
-                         chunks=chunks, topology=topology)
+                         chunks=chunks, topology=topology,
+                         gossip_async=gossip_async)
     if backend == "shard_map":
         assert mesh is not None
         return _dms_shard_map(w0, xs, ys, epochs=epochs, block_size=block_size,
                               c=c, grad_impl=grad_impl, mesh=mesh, axis=axis,
                               overlap=overlap, chunks=chunks,
-                              topology=topology)
+                              topology=topology, gossip_async=gossip_async)
     raise ValueError(backend)
 
 
@@ -510,7 +555,7 @@ def dms(w0: jax.Array, x: np.ndarray, y: np.ndarray, *, workers: int,
 def dms_timed_steps(mesh, axis: str, *, block_size: int, c: float = 1.0,
                     grad_impl: str = "jnp", overlap: str = "none",
                     chunks: int = 4, topology: str = "all",
-                    telemetry=None):
+                    gossip_async: bool = False, telemetry=None):
     """Returns (compute_step, sync_step) jitted separately so benchmarks can
     time computation vs communication — the paper's Figs 10–12 methodology
     (they instrument around MPI_AllReduce the same way).
@@ -534,11 +579,18 @@ def dms_timed_steps(mesh, axis: str, *, block_size: int, c: float = 1.0,
     blocking pmean for the gossip neighbor mix; models stay per-worker:
 
         gossip:  sync(w_locals, cnt) → w_new_locals       (ppermute mix)
+        async:   sync(w_locals, sent, mixbuf, cnt)
+                     → (w_new_locals, new_sent, new_mixbuf)
+                 (apply the stale correction, then the double-buffered
+                  ppermute half-exchange; seed sent/mixbuf with
+                  ``dms_async_buffers_init``)
     """
     gossip = topology != "all"
     if gossip and overlap != "none":
         raise ValueError("dms_timed_steps times gossip only for "
                          "overlap='none' (use dms_block_stepper otherwise)")
+    if gossip_async and not gossip:
+        raise ValueError("gossip_async needs topology='ring'/'pairwise'")
 
     def compute(w, xb, yb, alpha):
         # per-worker block update, NO sync. xb: (K, bs, d) sharded over axis.
@@ -556,7 +608,22 @@ def dms_timed_steps(mesh, axis: str, *, block_size: int, c: float = 1.0,
                           axis_names={axis}, check_vma=False)
         return f(w, xb, yb)
 
-    if gossip:
+    if gossip_async:
+        from repro.core import sync as _sync
+        w_self = _sync.gossip_self_weight(topology)
+
+        def sync(w_locals, sent, mixbuf, cnt):
+            def worker(wl, sl, bl, cnt):
+                new_w = wl[0] + bl[0] + (w_self - 1.0) * sl[0]
+                recv = _sync.gossip_recv(new_w, axis, topology,
+                                         round_idx=cnt)
+                return new_w[None], new_w[None], recv[None]
+            f = jax.shard_map(worker, mesh=mesh,
+                              in_specs=(P(axis), P(axis), P(axis), P()),
+                              out_specs=(P(axis), P(axis), P(axis)),
+                              axis_names={axis}, check_vma=False)
+            return f(w_locals, sent, mixbuf, cnt)
+    elif gossip:
         from repro.core import sync as _sync
 
         def sync(w_locals, cnt):
@@ -628,17 +695,29 @@ def dms_timed_steps(mesh, axis: str, *, block_size: int, c: float = 1.0,
     return timed_compute, timed_sync
 
 
+def dms_async_buffers_init(w_locals: jax.Array, topology: str):
+    """Seed ``(sent, mixbuf)`` for the async carries and timed-sync path —
+    the engine's zero-first-correction seed (one shared definition, see
+    :func:`repro.core.sync.init_async_buffers`)."""
+    from repro.core import sync as _sync
+    return _sync.init_async_buffers(w_locals, topology)
+
+
 # ---------------------------------------------------------------------------
 # single-block stepper — the unit the overlap benchmark times and the
 # jaxpr/HLO overlap test inspects
 # ---------------------------------------------------------------------------
 
 def dms_stepper_init(w0: jax.Array, workers: int, *, overlap: str = "none",
-                     chunks: int = 4, topology: str = "all"):
+                     chunks: int = 4, topology: str = "all",
+                     gossip_async: bool = False):
     """Global (stacked) initial carry for :func:`dms_block_stepper`."""
     d = w0.shape[0]
     wk = jnp.broadcast_to(w0, (workers, d))
-    if overlap == "none":
+    if gossip_async:
+        sent, mixbuf = dms_async_buffers_init(wk, topology)
+        carry = {"w": wk, "sent": sent, "mixbuf": mixbuf}
+    elif overlap == "none":
         carry = {"w": wk}
     elif overlap == "delayed":
         carry = {"w": wk, "pending": jnp.zeros((workers, d), w0.dtype)}
@@ -655,7 +734,8 @@ def dms_stepper_init(w0: jax.Array, workers: int, *, overlap: str = "none",
 
 def dms_block_stepper(mesh, axis: str, *, d: int, c: float = 1.0,
                       grad_impl: str = "jnp", overlap: str = "none",
-                      chunks: int = 4, topology: str = "all"):
+                      chunks: int = 4, topology: str = "all",
+                      gossip_async: bool = False):
     """One DMS block (compute + boundary sync) as a jittable step:
 
         step(carry, xblk, yblk, alpha) → carry
@@ -664,14 +744,20 @@ def dms_block_stepper(mesh, axis: str, *, d: int, c: float = 1.0,
     worker dim sharded over ``axis``; ``cnt`` is replicated) and ``xblk``
     (K, bs, d) / ``yblk`` (K, bs) sharded over ``axis``. Not jitted — wrap
     in ``jax.jit``/``lax.scan`` for timing, or ``jax.make_jaxpr`` to verify
-    the overlap property (delayed: no dot depends on the block's pmean) or
-    the gossip property (ring/pairwise: ppermutes only, no global
-    collective).
+    the overlap property (delayed: no dot depends on the block's pmean), the
+    gossip property (ring/pairwise: ppermutes only, no global collective),
+    or the async property (``gossip_async``: the ppermute output feeds only
+    the carried ``sent``/``mixbuf`` buffers — no dot in this *or* the next
+    block consumes it).
     """
     blockfn = _make_worker_block(axis, c=c, grad_impl=grad_impl,
                                  overlap=overlap, chunks=chunks, d=d,
-                                 topology=topology)
+                                 topology=topology,
+                                 gossip_async=gossip_async)
     cspec = {"w": P(axis)}
+    if gossip_async:
+        cspec["sent"] = P(axis)
+        cspec["mixbuf"] = P(axis)
     if overlap == "delayed":
         cspec["pending"] = P(axis)
     if overlap == "chunked" or _needs_round(overlap, topology):

@@ -66,6 +66,19 @@ byte-balanced shard per boundary. Compression composes point-to-point: the
 wire carries the quantized payload plus a per-sender scale (no shared-scale
 ``pmax``, and no psum headroom — the full int range is usable).
 
+``gossip_async=True`` (gossip topologies only) makes the rounds
+*unsynchronized*: each replica mixes with the **last received** neighbor
+snapshot instead of the current-round one — a double-buffered ``ppermute``
+exchange that sends this boundary's params and consumes the buffer the
+previous boundary filled (bounded staleness = 1 round on the compiled
+path). The stale correction ``(M w̃)_i − w̃_i`` still applies a doubly
+stochastic M to one common snapshot ``w̃``, so the corrections sum to zero
+across replicas and the replica mean stays invariant — the exact flush is
+unchanged. This boundary's ppermute output feeds only the carried buffers,
+never any compute before the *next* boundary, so the exchange has an
+entire block of slack — overlap modes are rejected as redundant (they
+would compound staleness past the 1-round bound).
+
 Optional modifiers (beyond-paper, composable):
 
 * ``compression="int8"`` — error-feedback int8 delta exchange
@@ -85,7 +98,7 @@ auto-tuner so the two can never drift).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -108,6 +121,18 @@ def validate(cfg: SyncConfig) -> None:
     if cfg.topology != "all" and cfg.slowmo > 0.0:
         raise ValueError("slowmo steps on the globally averaged delta; "
                          "gossip topologies never materialize a global mean")
+    if cfg.gossip_async:
+        if cfg.topology == "all":
+            raise ValueError(
+                "gossip_async is the unsynchronized-round gossip mode; it "
+                "needs topology='ring' or 'pairwise' (a global collective "
+                "has no per-neighbor buffer to double-buffer)")
+        if cfg.overlap != "none":
+            raise ValueError(
+                "gossip_async already runs the exchange a full block ahead "
+                "of its consumer (bounded staleness = 1 round); "
+                f"overlap={cfg.overlap!r} would compound the staleness — "
+                "use overlap='none'")
     if cfg.overlap == "chunked" and cfg.chunks < 1:
         raise ValueError(f"chunks must be >= 1, got {cfg.chunks}")
     if cfg.adaptive:
@@ -140,6 +165,14 @@ def init_sync_state(cfg: SyncConfig, params) -> Dict[str, Any]:
             # different boundaries, so a whole-tree block anchor can't exist)
             state["anchor"] = jax.tree.map(
                 lambda p: p.astype(jnp.float32), params)
+    if cfg.gossip_async:
+        # double buffers of the unsynchronized-round exchange: ``sent`` is
+        # the snapshot this replica transmitted at its previous boundary,
+        # ``mixbuf`` the neighbor-weighted payload sum Σ_{j≠i} M_ij w̃_j it
+        # received there (see init_async_buffers for the zero-correction
+        # seed invariant).
+        state["sent"], state["mixbuf"] = init_async_buffers(params,
+                                                            cfg.topology)
     if cfg.topology == "pairwise" and cfg.overlap != "chunked":
         # round parity selects the odd/even pairing (chunked derives the
         # round from chunk_idx instead — one counter per concern)
@@ -160,6 +193,9 @@ def sync_state_axes(cfg: SyncConfig, param_axes) -> Dict[str, Any]:
         state["chunk_idx"] = ()
         if cfg.slowmo > 0.0:
             state["anchor"] = param_axes
+    if cfg.gossip_async:
+        state["sent"] = param_axes
+        state["mixbuf"] = param_axes
     if cfg.topology == "pairwise" and cfg.overlap != "chunked":
         state["gossip_round"] = ()
     return state
@@ -214,6 +250,35 @@ def _mix_with(self_val, send, k: int, topology: str, round_idx):
         return lambda v: (v + send(perm)) / 2.0
     return jax.lax.cond(round_idx % 2 == 0, pair(perms[0]), pair(perms[1]),
                         self_val)
+
+
+def gossip_self_weight(topology: str) -> float:
+    """Diagonal ``M_ii`` of the gossip mixing matrix (same for every i):
+    ring thirds, pairwise halves. The async double buffer splits the mix
+    into ``M_ii·own + Σ_{j≠i} M_ij·recv`` — this is the own-term weight."""
+    if topology == "ring":
+        return 1.0 / 3.0
+    if topology == "pairwise":
+        return 0.5
+    raise ValueError(f"unknown gossip topology: {topology!r}")
+
+
+def _recv_with(send, k: int, topology: str, round_idx):
+    """Neighbor-weighted payload sum ``Σ_{j≠i} M_ij x_j`` — the receive
+    half of one wire exchange (no self term). ``_mix_with`` ≡
+    ``self_weight·own + _recv_with`` for the synchronous path; the async
+    path banks this in ``mixbuf`` and consumes it one boundary later.
+    """
+    perms = _gossip_perms(k, topology)
+    if topology == "ring":
+        return (send(perms[0]) + send(perms[1])) / 3.0
+    if round_idx is None:
+        raise ValueError("topology='pairwise' alternates its pairing by "
+                         "round; pass round_idx")
+    def pair(perm):
+        return lambda _: send(perm) / 2.0
+    return jax.lax.cond(round_idx % 2 == 0, pair(perms[0]), pair(perms[1]),
+                        0.0)
 
 
 def gossip_mix(x, axis: str, topology: str, round_idx=None):
@@ -272,6 +337,83 @@ def _gossip_exchange(values, ef, cfg: SyncConfig, axis: str, round_idx):
                           round_idx)
 
     return jax.tree.map(leaf, values), None
+
+
+def init_async_buffers(params, topology: str):
+    """Seed ``(sent, mixbuf)`` for the async double buffers from a params
+    pytree: as if every replica had transmitted its current model at a
+    previous boundary, so when replicas start identical the first stale
+    correction ``mixbuf + (M_ii−1)·sent`` is exactly zero. The single
+    definition of the seed — init, resume (``local_sgd.finalize_state``)
+    and the SVM carries all call it, so they cannot drift.
+    """
+    w_self = gossip_self_weight(topology)
+    # at least f32 (bf16 params get f32 buffers) without downcasting an
+    # f64 carry — lax.scan needs the carry dtype stable across boundaries
+    sent = jax.tree.map(
+        lambda p: p.astype(jnp.promote_types(p.dtype, jnp.float32)), params)
+    mixbuf = jax.tree.map(lambda p: (1.0 - w_self) * p, sent)
+    return sent, mixbuf
+
+
+def gossip_recv(x, axis: str, topology: str, round_idx=None):
+    """Receive half of one gossip exchange over ``axis``: the
+    neighbor-weighted payload sum ``Σ_{j≠i} M_ij x_j`` (ppermutes only, no
+    self term). ``gossip_mix(x) ≡ gossip_self_weight·x + gossip_recv(x)``;
+    the async path banks this in its ``mixbuf`` double buffer instead of
+    consuming it at the same boundary.
+    """
+    k = jax.lax.psum(1, axis)      # static at trace time
+    return _recv_with(lambda perm: jax.lax.ppermute(x, axis, perm),
+                      k, topology, round_idx)
+
+
+def _gossip_async_exchange(values, ef, cfg: SyncConfig, axis: str,
+                           round_idx):
+    """Double-buffered half-exchange: ppermute this boundary's payload and
+    return what lands in the buffers, to be *consumed at the next boundary*.
+
+    Returns ``(recv_tree, sent_tree, new_ef_tree_or_None)``: ``recv`` is
+    the neighbor-weighted payload sum ``Σ_{j≠i} M_ij p_j`` under this
+    round's pairing and ``sent`` the own transmitted payload. Under
+    compression the wire carries ``(q, per-sender scale)`` and ``sent`` is
+    the own *dequantized* payload — every replica's stale mix then applies
+    the doubly stochastic M to the same transmitted snapshot, and the
+    quantization residual goes to error feedback.
+    """
+    k = jax.lax.psum(1, axis)      # static at trace time
+
+    if cfg.compression in ("int8", "int16"):
+        qmax, qdtype = ((127, jnp.int8) if cfg.compression == "int8"
+                        else (32767, jnp.int16))
+
+        def leaf(v, e):
+            val = v + e
+            amax = jnp.max(jnp.abs(val))
+            scale = jnp.maximum(amax, 1e-12) / qmax
+            q = jnp.clip(jnp.round(val / scale), -qmax, qmax).astype(qdtype)
+            deq_self = q.astype(jnp.float32) * scale
+
+            def send(perm):
+                qn = jax.lax.ppermute(q, axis, perm)
+                sn = jax.lax.ppermute(scale, axis, perm)
+                return qn.astype(jnp.float32) * sn
+
+            return (_recv_with(send, k, cfg.topology, round_idx),
+                    deq_self, val - deq_self)
+
+        out = jax.tree.map(leaf, values, ef)
+        is_t = lambda x: isinstance(x, tuple)
+        recv = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+        sent = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+        new_ef = jax.tree.map(lambda o: o[2], out, is_leaf=is_t)
+        return recv, sent, new_ef
+
+    def leaf(v):
+        return _recv_with(lambda perm: jax.lax.ppermute(v, axis, perm),
+                          k, cfg.topology, round_idx)
+
+    return jax.tree.map(leaf, values), values, None
 
 
 def _exchange_mean(values, ef, cfg: SyncConfig, axis: str, param_axes,
@@ -359,6 +501,8 @@ def sync_point(params_start, params_end, sync_state: Dict[str, Any],
     ``param_axes`` — per-leaf logical axes (keeps the compressed-sync
     buffers sharded; see compression.allgather_mean_dequant).
     """
+    if cfg.gossip_async:
+        return _sync_point_gossip_async(params_end, sync_state, cfg, axis)
     if cfg.topology != "all" and cfg.overlap != "chunked":
         return _sync_point_gossip(params_end, sync_state, cfg, axis)
     if cfg.overlap == "delayed":
@@ -432,6 +576,47 @@ def _sync_point_gossip(params_end, sync_state, cfg, axis):
         new_state["pending"] = jax.tree.map(lambda m, v: m - v, mixed, vals)
         return new_params, new_state
     new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), mixed,
+                              params_end)
+    return new_params, new_state
+
+
+def _sync_point_gossip_async(params_end, sync_state, cfg, axis):
+    """Asynchronous (unsynchronized-round) gossip: mix with the *last
+    received* neighbor snapshot instead of the current-round one.
+
+    The correction applied at this boundary is ``(M w̃)_i − w̃_i`` where
+    ``w̃`` is the snapshot every replica transmitted at its PREVIOUS
+    boundary — reconstructed from the double buffers as
+    ``mixbuf + M_ii·sent − sent``. M is doubly stochastic and applies to
+    one common snapshot, so the corrections sum to zero over replicas and
+    the replica mean stays invariant (exact flush unchanged). This
+    boundary then transmits the *post-correction* params: with zero local
+    drift the recurrence collapses to synchronous gossip one round behind
+    (``w_t = M w_{t−1}``), so the per-round contraction is still λ₂ — what
+    staleness costs is one extra block of unmixed drift, which the
+    auto-tuner charges via ``costmodel.effective_spectral_gap``.
+
+    Schedule-wise this is stronger than ``overlap="delayed"``: the
+    ppermute output feeds only the carried buffers, and nothing before the
+    *next* boundary reads them — the exchange has an entire block of slack
+    and a replica never waits for a neighbor's current round.
+    """
+    new_state = dict(sync_state)
+    rnd = sync_state.get("gossip_round")
+    if rnd is not None:
+        new_state["gossip_round"] = rnd + 1
+    w_self = gossip_self_weight(cfg.topology)
+    vals = jax.tree.map(lambda p: p.astype(jnp.float32), params_end)
+    new_w = jax.tree.map(
+        lambda v, rb, s: v + rb + (w_self - 1.0) * s,
+        vals, sync_state["mixbuf"], sync_state["sent"])
+    recv, sent, new_ef = _gossip_async_exchange(
+        new_w, sync_state.get("ef"), cfg, axis, rnd)
+    new_state["mixbuf"] = recv
+    new_state["sent"] = sent
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), new_w,
                               params_end)
     return new_params, new_state
 
@@ -561,7 +746,11 @@ def flush_overlap(params, sync_state, cfg: SyncConfig, replica_dim: int = 0):
     would drop it). ``chunked`` replicas differ only by not-yet-synced drift
     whose replica average is the consistent model; gossip topologies leave
     replicas within the geometric consensus envelope whose replica average
-    is the invariant mean (doubly stochastic mixing). When ``compression``
+    is the invariant mean (doubly stochastic mixing); under
+    ``gossip_async`` the in-flight buffer corrections sum to zero across
+    replicas, so the bare replica mean is already the consensus target
+    (``finalize_state`` re-seeds the double buffers from the flushed
+    params so resume starts with a zero stale correction). When ``compression``
     is on, the error-feedback residual — quantization error each replica
     would have re-submitted at its next sync, where averaging would have
     spread its replica mean to everyone — is folded in before the collapse,

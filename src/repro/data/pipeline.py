@@ -10,7 +10,7 @@ the slice is the whole batch, but the code path is the multi-host one.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np

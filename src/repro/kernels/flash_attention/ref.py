@@ -1,7 +1,6 @@
 """Pure-jnp oracle: grouped-query SDPA with f32 softmax."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def hinge_block_grad(w: jax.Array, x: jax.Array, y: jax.Array,

@@ -12,7 +12,7 @@ Production target: TPU v5e pods, 256 chips each.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import json
 import time
-from typing import List
 
 import jax
 import jax.numpy as jnp

@@ -17,9 +17,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
-from repro.config import TrainConfig, get_arch, replace
+from repro.config import TrainConfig, get_arch
 from repro.config.base import MeshConfig, ModelConfig, SyncConfig
 from repro.core import local_sgd as LS
 from repro.core import sync as SY

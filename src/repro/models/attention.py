@@ -13,7 +13,6 @@ Two distribution regimes:
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

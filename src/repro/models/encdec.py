@@ -11,7 +11,7 @@ cross KV (computed once at prefill from the encoder output, then frozen).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ the model axis with the distributed flash-decode merge.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

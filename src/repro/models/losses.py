@@ -35,7 +35,6 @@ def _ce_block(x: jax.Array, table: jax.Array, targets: jax.Array,
     lse = jax.nn.logsumexp(logits, axis=-1)
     # gather-free target pick (iota-select fuses; take_along_axis is a
     # gather, which the SPMD partitioner mishandles in manual subgroups)
-    v = logits.shape[-1]
     iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
     tgt = jnp.sum(jnp.where(iota == targets[..., None], logits, 0.0),
                   axis=-1)

@@ -18,7 +18,6 @@ replicated (N = 64..128, negligible).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

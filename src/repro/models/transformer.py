@@ -17,7 +17,7 @@ compiles tractable), with optional per-layer ``jax.checkpoint`` (remat).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

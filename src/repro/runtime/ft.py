@@ -21,7 +21,7 @@ device heartbeats instead of wall-clock.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List
 
 import jax
 

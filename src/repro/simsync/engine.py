@@ -26,6 +26,17 @@ idea as Shi et al. (arXiv:1805.03812) — over a :class:`ClusterProfile`:
   - ``overlap="delayed"`` — the boundary-*b* collective runs concurrently
     with block *b+1*; the worker stalls at boundary *b+1* only if the
     in-flight collective outlasts that block's compute.
+  - ``gossip_async`` (gossip topologies) — *unsynchronized rounds*: a
+    worker's sync event waits only on messages that have **arrived**,
+    never on a neighbor's round completion. Each boundary consumes the
+    last received neighbor payload (nominally the neighbor's previous
+    round — the compiled path's 1-round double buffer) and sends its own;
+    a payload that has not landed yet simply stays unconsumed and the
+    buffer's staleness grows instead of the worker stalling. A transient
+    straggle therefore delays *only the straggled worker's own blocks*;
+    its neighbors' clean blocks stay clean (``BlockStats``/``SimResult``
+    expose the clean-block mean and the realized buffer staleness so the
+    decoupling is measurable).
 
 Every boundary emits per-worker timeline slices (compute / sync / stall)
 for the Chrome-trace export (:mod:`repro.simsync.trace`) and per-block
@@ -92,6 +103,17 @@ class SimResult:
     comm_exposed_s: float      # mean per-worker exposed (critical-path) comm
     comm_wire_s: float         # mean per-worker collective occupancy
     timeline: List[Slice]
+    # decoupling metrics: a (worker, block) sample is *clean* when that
+    # worker did not draw a transient straggle that block. Synchronized
+    # schedules leak neighbor straggles into clean blocks (barrier/group
+    # waits); async gossip must keep clean blocks at the straggler-free
+    # block time — exactly what the acceptance row compares.
+    clean_block_mean_s: float = 0.0
+    straggled_frac: float = 0.0
+    # realized receive-buffer staleness (rounds behind the consumer's
+    # round) — async mode only; the nominal double-buffer value is 1
+    stale_rounds_mean: float = 0.0
+    stale_rounds_max: int = 0
 
     @property
     def per_step_s(self) -> float:
@@ -112,6 +134,10 @@ class SimResult:
             "comm_wire_s": self.comm_wire_s,
             "per_step_us": self.per_step_s * 1e6,
             "comm_fraction": self.comm_fraction,
+            "clean_block_mean_s": self.clean_block_mean_s,
+            "straggled_frac": self.straggled_frac,
+            "stale_rounds_mean": self.stale_rounds_mean,
+            "stale_rounds_max": self.stale_rounds_max,
         }
 
 
@@ -150,6 +176,10 @@ class ClusterSim:
         self.cfg = cfg or SyncConfig(strategy="periodic")
         if self.cfg.topology == "pairwise" and profile.world % 2:
             raise ValueError("topology='pairwise' needs an even worker count")
+        self.async_rounds = bool(self.cfg.gossip_async)
+        if self.async_rounds and self.cfg.topology == "all":
+            raise ValueError("gossip_async needs a gossip topology "
+                             "(ring/pairwise)")
         k = profile.world
         self.k = k
         self.rng = np.random.default_rng(seed)
@@ -162,6 +192,21 @@ class ClusterSim:
         self.compute_total = np.zeros(k)
         self.exposed_total = np.zeros(k)
         self.wire_total = np.zeros(k)
+        # decoupling accounting: block durations split by whether the
+        # worker itself drew a transient straggle that block
+        self._clean_dur = 0.0
+        self._clean_n = 0
+        self._hit_n = 0
+        self._last_hit = np.zeros(k, bool)
+        # async: per-block send-launch history (for message-arrival lookups)
+        # + realized receive staleness stats. Sender index arrays depend
+        # only on round parity (ring not even on that) — precompute both.
+        self._launch_hist: List[np.ndarray] = []
+        if self.async_rounds:
+            self._senders = (self._in_senders(0), self._in_senders(1))
+        self._stale_sum = 0.0
+        self._stale_n = 0
+        self._stale_max = 0
         self.t_comm = sync_wire_time_s(profile, self.cfg)
         self._step_mean = np.array([w.step_time * w.slowdown
                                     for w in profile.workers])
@@ -184,7 +229,42 @@ class ClusterSim:
         if self._straggle_p.any():
             hit = self.rng.random(self.k) < self._straggle_p
             base = np.where(hit, base * self._straggle_f, base)
+            self._last_hit = hit
+        else:
+            self._last_hit = np.zeros(self.k, bool)
         return base
+
+    def _in_senders(self, rnd: int) -> List[np.ndarray]:
+        """Per-worker sender indices of the round-``rnd`` exchange (one
+        array per incoming wire slot: ring two, pairwise one)."""
+        i = np.arange(self.k)
+        if self.cfg.topology == "ring":
+            return [np.roll(i, 1), np.roll(i, -1)]
+        if rnd % 2 == 0:
+            return [i ^ 1]
+        return [np.where(i % 2 == 0, (i - 1) % self.k, (i + 1) % self.k)]
+
+    def _account_staleness(self, b: int, t_now: np.ndarray) -> None:
+        """Record the realized receive-buffer staleness at boundary ``b``:
+        for each incoming wire, how many rounds behind the *last arrived*
+        message is (nominal double-buffer value: 1). Seed buffers (no
+        message arrived yet) are skipped. The backward scan breaks at the
+        first (latest) arrived round — normally immediately, and only a
+        worker whose sender fell r rounds behind scans r entries."""
+        hist = self._launch_hist            # includes this block at [b]
+        slots = len(self._senders[0])
+        for i in range(self.k):
+            deadline = t_now[i]
+            for slot in range(slots):
+                for r in range(b, -1, -1):
+                    j = int(self._senders[r % 2][slot][i])
+                    if hist[r][j] + self.t_comm <= deadline:
+                        s = b - r
+                        self._stale_sum += s
+                        self._stale_n += 1
+                        if s > self._stale_max:
+                            self._stale_max = s
+                        break
 
     def _group_max(self, arr: np.ndarray) -> np.ndarray:
         """Per-worker max arrival over its sync coupling group."""
@@ -219,7 +299,19 @@ class ClusterSim:
         comp_end = start + comp
         b = self.block_idx
 
-        if self.cfg.overlap == "delayed":
+        if self.async_rounds:
+            # unsynchronized rounds: the boundary consumes whatever has
+            # arrived (never waits on a neighbor's round) and launches its
+            # own send, which runs under the next block's compute — zero
+            # critical-path exposure; a late message only grows the
+            # consumer's buffer staleness (accounted below)
+            launch = comp_end
+            new_t = comp_end.copy()
+            sync_meas = np.zeros(self.k)
+            exposed = np.zeros(self.k)
+            self._launch_hist.append(launch.copy())
+            self._account_staleness(b, new_t)
+        elif self.cfg.overlap == "delayed":
             # stall only if the previous boundary's collective outlasts
             # this block's compute
             boundary = (np.maximum(comp_end, self._inflight)
@@ -244,7 +336,12 @@ class ClusterSim:
             for i in range(self.k):
                 self.timeline.append(Slice(i, "compute", start[i],
                                            comp_end[i], b))
-                if self.cfg.overlap == "delayed":
+                if self.async_rounds:
+                    # the non-blocking send: occupies the wire under the
+                    # next block's compute, no stall lane ever
+                    self.timeline.append(Slice(i, "sync", launch[i],
+                                               launch[i] + self.t_comm, b))
+                elif self.cfg.overlap == "delayed":
                     if exposed[i] > 0:
                         self.timeline.append(Slice(i, "stall", comp_end[i],
                                                    new_t[i], b))
@@ -254,6 +351,11 @@ class ClusterSim:
                     self.timeline.append(Slice(i, "sync", comp_end[i],
                                                done[i], b))
 
+        dur = new_t - start
+        clean = ~self._last_hit
+        self._clean_dur += float(dur[clean].sum())
+        self._clean_n += int(clean.sum())
+        self._hit_n += int(self._last_hit.sum())
         self.t = new_t
         self.block_idx += 1
         self.steps += h
@@ -283,6 +385,7 @@ class ClusterSim:
 
     def result(self, h_label: int) -> SimResult:
         self.drain()
+        samples = self.k * max(1, self.block_idx)
         return SimResult(
             profile=self.profile.name, sync_label=self.cfg.msf_label,
             h=h_label, workers=self.k, steps=self.steps,
@@ -290,7 +393,13 @@ class ClusterSim:
             compute_s=float(self.compute_total.mean()),
             comm_exposed_s=float(self.exposed_total.mean()),
             comm_wire_s=float(self.wire_total.mean()),
-            timeline=self.timeline)
+            timeline=self.timeline,
+            clean_block_mean_s=(self._clean_dur / self._clean_n
+                                if self._clean_n else 0.0),
+            straggled_frac=self._hit_n / samples,
+            stale_rounds_mean=(self._stale_sum / self._stale_n
+                               if self._stale_n else 0.0),
+            stale_rounds_max=self._stale_max)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,5 @@
 """Multi-device correctness (subprocess, 8 host devices): the sharded
 execution paths must match their single-device oracles."""
-import pytest
 
 from conftest import run_with_devices
 

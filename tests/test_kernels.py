@@ -1,6 +1,5 @@
 """Per-kernel shape/dtype sweeps against the pure-jnp oracles
 (interpret=True executes the Pallas kernel bodies on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,5 +1,4 @@
 """Fault-tolerant step runner: failure/restart replay, stragglers, pipeline."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -100,7 +99,8 @@ class TestPipeline:
         cfg = DataConfig(seq_len=16, global_batch=4, seed=5)
         mc = ModelConfig(vocab_size=128)
         p = DataPipeline(cfg, mc)
-        batches = [next(p) for _ in range(5)]
+        for _ in range(5):
+            next(p)               # advance the cursor
         st = p.state()
         q = DataPipeline(cfg, mc, start_step=st["step"])
         nxt_p, nxt_q = next(p), next(q)

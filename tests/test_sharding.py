@@ -1,6 +1,4 @@
 """Logical-axis sharding rules: divisibility fallback, axis dedup, remap."""
-import jax
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:   # optional dev dep: property tests skip
@@ -8,7 +6,7 @@ except ImportError:   # optional dev dep: property tests skip
 from jax.sharding import PartitionSpec as P
 
 from repro.config import MeshConfig
-from repro.sharding import DEFAULT_RULES, ShardingRules, rules_for
+from repro.sharding import DEFAULT_RULES, rules_for
 
 
 class FakeMesh:

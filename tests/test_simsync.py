@@ -11,7 +11,6 @@ round-trip, and Chrome-trace validity. Pure numpy — no jax, fast.
 """
 import json
 
-import numpy as np
 import pytest
 
 try:

@@ -2,14 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:   # optional dev dep: property tests skip
     from conftest import given, settings, st
 
 from repro.core import svm
-from repro.data import make_svm_dataset
 
 
 def _interleave(x, y, k, sb):
