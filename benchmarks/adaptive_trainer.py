@@ -1,0 +1,124 @@
+"""Adaptive H-ladder trainer sweep (deterministic, simulator-driven).
+
+The live trainer's H-ladder runtime (``repro.runtime.ladder``) moves the
+MSF period mid-run by switching between pre-compiled rungs; this sweep
+grades the *schedule* side of that loop on the simsync cluster simulator
+(pure numpy, fixed seeds — bench-gate can diff it bit-for-bit), using the
+same :class:`repro.core.autotune.AdaptiveController` in ladder mode and
+the same host-observed calibration pair the real path feeds it. The real
+path's own trajectory is exercised by the ``adaptive-smoke`` CI job
+(``repro.launch.train --smoke`` with ``sync.adaptive=true``), whose
+artifact carries the measured counterpart of these rows.
+
+Sections (one JSON row each, bundled into ``BENCH_adaptive_trainer.json``):
+
+  trajectory — per profile: the controller's (block, H) rung moves, its
+               final rung vs the simulator oracle snapped to the same
+               ladder (``rung_err`` gates at any-rise).
+  per_rung   — simulated mean block time and block count per visited rung
+               (the simulator analog of ``BlockTelemetry.per_rung``).
+  comm_saved — exposed comm time of the adaptive run vs a fixed H=1 run
+               of the same step budget: the paper's comm ∝ 1/H win,
+               realized *online* by one run instead of a sweep.
+
+Run via ``python -m benchmarks.run adaptive_trainer [--json]``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks import record
+from benchmarks.simsync_sweep import H_LADDER as LADDER
+from repro.config.base import SyncConfig
+from repro.core.autotune import AdaptiveController, snap_to_ladder
+from repro.simsync import PROFILES, oracle_h, simulate
+from repro.simsync.engine import ClusterSim
+
+BLOCKS = 200
+SEED = 0
+PROFILE_NAMES = ("dcn_default", "dcn_straggler")
+
+
+def _run_ladder_controller(profile, cfg: SyncConfig):
+    """Closed loop on the simulator with per-rung bookkeeping.
+
+    Mirrors :func:`repro.simsync.engine.simulate_adaptive` — including
+    feeding the controller the host-observed (slowest-shard compute,
+    barrier-free collective) pair — but also groups block durations by
+    the rung they ran at, which is what the per-rung section reports.
+    """
+    ctrl = AdaptiveController(
+        cfg, param_bytes_per_chip=profile.param_bytes,
+        replicas=profile.world, link_bw=profile.link.bandwidth,
+        h0=1, adapt_every=8, lr=1e-6, ladder=LADDER)
+    sim = ClusterSim(profile, cfg, seed=SEED + 1)
+    per_rung: Dict[int, Dict[str, float]] = {}
+    for _ in range(BLOCKS):
+        h = ctrl.h
+        stats = sim.run_block(h)
+        agg = per_rung.setdefault(h, {"block_s_sum": 0.0, "blocks": 0})
+        agg["block_s_sum"] += stats.block_s
+        agg["blocks"] += 1
+        ctrl.observe_block(step_s=stats.compute_max_s / max(1, h),
+                           sync_s=stats.sync_wire_s)
+    return ctrl, sim.result(ctrl.h), per_rung
+
+
+def run() -> List[str]:
+    lines: List[str] = []
+    rows: List[Dict] = []
+    cfg = SyncConfig(strategy="periodic")
+
+    for name in PROFILE_NAMES:
+        profile = PROFILES[name]
+        ctrl, result, per_rung = _run_ladder_controller(profile, cfg)
+        oh = oracle_h(profile, cfg, target_overhead=0.05, steps=2048,
+                      seed=SEED)
+        oracle_rung = snap_to_ladder(oh, LADDER)
+        rung_err = abs(LADDER.index(ctrl.h) - LADDER.index(oracle_rung))
+        rows.append({
+            "section": "trajectory", "profile": name,
+            "ladder": list(LADDER), "history": list(ctrl.history),
+            "final_h": ctrl.h, "switches": len(ctrl.history) - 1,
+            "oracle_h": oh, "oracle_rung": oracle_rung,
+            "rung_err": rung_err,
+        })
+        lines.append(
+            f"adaptive_trainer,trajectory,{name} oracle_rung={oracle_rung},"
+            f"final_h={ctrl.h} moves={len(ctrl.history) - 1} "
+            f"rung_err={rung_err}")
+
+        for h in sorted(per_rung):
+            agg = per_rung[h]
+            mean_s = agg["block_s_sum"] / max(1, agg["blocks"])
+            rows.append({
+                "section": "per_rung", "profile": name, "H": h,
+                "block_s": mean_s, "blocks": agg["blocks"],
+            })
+            lines.append(f"adaptive_trainer,per_rung,{name} H={h},"
+                         f"{mean_s * 1e3:.3f}")
+
+        # fixed-H=1 run over the same optimizer-step budget the adaptive
+        # run consumed — what the online schedule saved in exposed comm
+        h1 = simulate(profile, cfg, h=1, steps=max(1, result.steps),
+                      seed=SEED + 1)
+        saved_x = h1.comm_exposed_s / max(result.comm_exposed_s, 1e-12)
+        rows.append({
+            "section": "comm_saved", "profile": name,
+            "steps": result.steps,
+            "h1_comm_exposed_s": h1.comm_exposed_s,
+            "adaptive_comm_exposed_s": result.comm_exposed_s,
+            "adaptive_wall_s": result.wall_clock_s,
+            "h1_wall_s": h1.wall_clock_s,
+            "saved_x": saved_x,
+        })
+        lines.append(f"adaptive_trainer,comm_saved,{name},"
+                     f"{saved_x:.1f}")
+
+    record.save("adaptive_trainer", rows)
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

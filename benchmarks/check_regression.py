@@ -83,6 +83,27 @@ def _metrics_simsync(bundle: dict) -> Iterator[Metric]:
         elif sec == "adaptive":
             key = f"adaptive[{r['profile']}].rel_err"
             yield key, r["rel_err"], "lower", None
+        elif sec == "ladder":
+            key = f"ladder[{r['profile']}].rung_err"
+            yield key, r["rung_err"], "lower", None
+
+
+def _metrics_adaptive_trainer(bundle: dict) -> Iterator[Metric]:
+    for r in _rows(bundle, "adaptive_trainer"):
+        sec = r.get("section")
+        if sec == "trajectory":
+            key = f"trajectory[{r['profile']}]"
+            yield key + ".rung_err", r["rung_err"], "lower", None
+            yield key + ".final_h", r["final_h"], "info", None
+            yield key + ".switches", r["switches"], "info", None
+        elif sec == "per_rung":
+            key = f"per_rung[{r['profile']}/H={r['H']}].block_s"
+            yield key, r["block_s"], "time", None
+        elif sec == "comm_saved":
+            key = f"comm_saved[{r['profile']}]"
+            yield key + ".saved_x", r["saved_x"], "higher", None
+            comm = r["adaptive_comm_exposed_s"]
+            yield key + ".adaptive_comm_exposed_s", comm, "time", None
 
 
 def _csv_info(bundle: dict, prefix: str) -> Iterator[Metric]:
@@ -138,6 +159,7 @@ def _metrics_overlap(bundle: dict) -> Iterator[Metric]:
 
 EXTRACTORS = {
     "BENCH_simsync_sweep.json": _metrics_simsync,
+    "BENCH_adaptive_trainer.json": _metrics_adaptive_trainer,
     "BENCH_hinge_kernel.json": _metrics_hinge,
     "BENCH_gossip_sweep.json": _metrics_gossip,
     "BENCH_overlap_sweep.json": _metrics_overlap,

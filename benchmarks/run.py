@@ -30,9 +30,10 @@ def _roofline() -> List[str]:
 
 
 def registry() -> Dict[str, Callable[[], List[str]]]:
-    from benchmarks import paper_figs, simsync_sweep
+    from benchmarks import adaptive_trainer, paper_figs, simsync_sweep
     reg: Dict[str, Callable[[], List[str]]] = dict(paper_figs.ALL)
     reg["simsync_sweep"] = simsync_sweep.run
+    reg["adaptive_trainer"] = adaptive_trainer.run
     reg["roofline"] = _roofline
     return reg
 

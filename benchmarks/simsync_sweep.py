@@ -209,6 +209,32 @@ def run() -> List[str]:
         lines.append(f"simsync_sweep,adaptive,{name} oracle={oh},"
                      f"ctrl={ctrl.h} rel={rel:.3f}")
 
+    # --- 3b) H-ladder parity: the trainer's rung-snapped controller -----
+    # The live trainer moves H only onto its pre-compiled ladder rungs
+    # (repro.runtime.ladder). Re-run the closed loop with the controller
+    # in ladder mode on the same simulated telemetry and grade it against
+    # the oracle snapped to the same ladder — the simulated counterpart
+    # of the trajectory the adaptive-smoke CI job records on the real
+    # path. Gate: within one rung of the snapped oracle.
+    from repro.core.autotune import snap_to_ladder
+    rungs = H_LADDER
+    for name in ("dcn_default", "ici_pod"):
+        p = PROFILES[name]
+        oh = oracle_h(p, cfg, target_overhead=0.05, steps=STEPS, seed=SEED)
+        ctrl = AdaptiveController(cfg, param_bytes_per_chip=p.param_bytes,
+                                  replicas=p.world,
+                                  link_bw=p.link.bandwidth, h0=1,
+                                  adapt_every=8, lr=1e-6, ladder=rungs)
+        _, hist = simulate_adaptive(p, cfg, ctrl, blocks=200, seed=SEED + 1)
+        oracle_rung = snap_to_ladder(oh, rungs)
+        rung_err = abs(rungs.index(ctrl.h) - rungs.index(oracle_rung))
+        rows.append({"section": "ladder", "profile": name,
+                     "ladder": list(rungs), "oracle_h": oh,
+                     "oracle_rung": oracle_rung, "controller_h": ctrl.h,
+                     "rung_err": rung_err, "history": hist})
+        lines.append(f"simsync_sweep,ladder,{name} oracle_rung="
+                     f"{oracle_rung},ctrl={ctrl.h} rung_err={rung_err}")
+
     # --- 4) artifacts: chrome traces + the Figs 13–15 SVG ---------------
     # (ring_async lanes show sends running under the next block's compute
     # with no stall lane at all — vs ring's one-hop-per-round stalls and

@@ -183,6 +183,32 @@ class SyncConfig:
     adapt_hysteresis: float = 0.25
     adapt_target_overhead: float = 0.05
     adapt_max_drift: float = 0.01
+    # --- H-ladder runtime (repro.runtime.ladder.LadderRuntime) ---------
+    # The live trainer pre-compiles the train block for a *ladder* of
+    # periods sharing one state layout, so an adaptive H move mid-run is
+    # a flush + pick-another-compiled-callable — no recompilation. The
+    # ladder is geometric {1, ladder_base, ladder_base², …, adapt_h_max}
+    # (plus ``period`` so the starting rung always exists) unless
+    # ``adapt_ladder`` pins explicit rungs. ``adapt_rung_hysteresis`` is
+    # the controller's move threshold in *rung units*: the re-solved H
+    # must snap at least that many rungs away before the schedule moves
+    # (geometric spacing already absorbs sub-factor-of-base noise).
+    adapt_h_max: int = 64          # top rung of the geometric ladder
+    adapt_ladder: Tuple[int, ...] = ()   # explicit rungs (overrides h_max)
+    ladder_base: int = 2           # geometric ladder ratio
+    adapt_rung_hysteresis: int = 1
+
+    def ladder_rungs(self) -> Tuple[int, ...]:
+        """The pre-compiled H ladder: sorted, unique, start rung included."""
+        if self.adapt_ladder:
+            rungs = set(int(h) for h in self.adapt_ladder)
+        else:
+            rungs, h = set(), 1
+            while h <= max(1, self.adapt_h_max):
+                rungs.add(h)
+                h *= max(2, self.ladder_base)
+        rungs.add(max(1, self.period))
+        return tuple(sorted(rungs))
 
     @property
     def msf_label(self) -> str:

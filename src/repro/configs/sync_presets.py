@@ -56,6 +56,20 @@ SYNC_PRESETS: Dict[str, SyncConfig] = {
     "adaptive_gossip_ring": SyncConfig(strategy="periodic", period=8,
                                        topology="ring", overlap="delayed",
                                        adaptive=True, adapt_every=16),
+    # mid-run adaptive MSF via the pre-compiled H-ladder (ISSUE 5): the
+    # trainer AOT-compiles every rung of the geometric ladder
+    # {1,2,…,adapt_h_max} at launch and the controller moves between them
+    # live — an H change is a flush + switch, zero recompiles. Rung
+    # hysteresis replaces the relative-band knob (geometric spacing
+    # already absorbs sub-2x noise).
+    "adaptive_ladder_dcn": SyncConfig(strategy="hierarchical", period=8,
+                                      overlap="delayed", adaptive=True,
+                                      adapt_every=8, adapt_h_max=64),
+    "adaptive_ladder_gossip_ring": SyncConfig(strategy="periodic", period=8,
+                                              topology="ring",
+                                              overlap="delayed",
+                                              adaptive=True, adapt_every=8,
+                                              adapt_h_max=64),
 }
 
 

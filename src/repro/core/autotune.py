@@ -147,6 +147,26 @@ def predicted_step_time(inp: TuneInputs, cfg: SyncConfig, h: int) -> float:
         inp.step_time_s, sync_time_s(inp, cfg), h, cfg)
 
 
+def snap_to_ladder(h: int, ladder) -> int:
+    """Nearest ladder rung to ``h`` in log space (geometric ladders make
+    "nearest" multiplicative: 6 snaps to 8 on {1,2,4,8}, not to 4).
+
+    Integer-exact: ``h`` is past the lo→hi boundary iff ``h² > lo·hi``
+    (the geometric midpoint), so float-log rounding can never flip a
+    tie — exact midpoints resolve to the smaller rung (more frequent
+    sync is the safe side).
+    """
+    ladder = sorted(set(int(r) for r in ladder))
+    if not ladder:
+        raise ValueError("empty ladder")
+    h = max(1, int(h))
+    best = ladder[0]
+    for lo, hi in zip(ladder, ladder[1:]):
+        if h * h > lo * hi:
+            best = hi
+    return best
+
+
 # ---------------------------------------------------------------------------
 # online adaptive MSF: choose_period re-solved from running telemetry
 # ---------------------------------------------------------------------------
@@ -166,9 +186,25 @@ class AdaptiveController:
 
     Hysteresis: H only moves when the re-solve differs from the current
     period by more than ``hysteresis`` (relative), so measurement noise
-    cannot thrash the schedule (every H change recompiles the train block
-    on the real path). Defaults come from the ``SyncConfig.adapt_*``
-    fields; ``history`` records every ``(block, H)`` transition.
+    cannot thrash the schedule. Defaults come from the
+    ``SyncConfig.adapt_*`` fields; ``history`` records every ``(block,
+    H)`` transition.
+
+    **Ladder mode** (``ladder=(1, 2, 4, …)``): the controller emits moves
+    only onto the given rungs — the pre-compiled H ladder of
+    :class:`repro.runtime.ladder.LadderRuntime`, where an H change is a
+    flush + switch to an already-compiled block (no recompilation). The
+    re-solved H snaps to the log-nearest rung and the schedule moves only
+    when that rung is at least ``rung_hysteresis`` rungs away from the
+    current one (hysteresis in *rung units*; the geometric spacing itself
+    absorbs sub-factor-of-two noise, so the relative ``hysteresis`` knob
+    is ignored in ladder mode).
+
+    When the telemetry cannot yet separate T_step/T_sync (the LM block
+    path sees only whole-block times, and least squares needs two
+    distinct H's), the re-solve falls back to the crude per-step time
+    with the *analytic* wire-bytes/bandwidth T_sync — enough to make the
+    first move, after which the per-rung block times pin the split.
 
     The driver loop (trainer or :func:`repro.simsync.engine
     .simulate_adaptive`) calls :meth:`observe_block` once per executed
@@ -188,7 +224,9 @@ class AdaptiveController:
                  hysteresis: Optional[float] = None,
                  target_overhead: Optional[float] = None,
                  max_drift: Optional[float] = None,
-                 h_max: int = 1024):
+                 h_max: int = 1024,
+                 ladder=None,
+                 rung_hysteresis: Optional[int] = None):
         from repro.core.telemetry import BlockTelemetry
         self.cfg = cfg
         self.param_bytes_per_chip = param_bytes_per_chip
@@ -204,9 +242,16 @@ class AdaptiveController:
                                 else cfg.adapt_target_overhead)
         self.max_drift = (max_drift if max_drift is not None
                           else cfg.adapt_max_drift)
-        self.h_max = max(1, h_max)
+        self.ladder = tuple(sorted(set(int(r) for r in ladder))) \
+            if ladder else None
+        self.rung_hysteresis = max(1, rung_hysteresis
+                                   if rung_hysteresis is not None
+                                   else cfg.adapt_rung_hysteresis)
+        self.h_max = max(1, h_max if not self.ladder else self.ladder[-1])
         self.h = max(1, min(h0 if h0 is not None else cfg.period,
                             self.h_max))
+        if self.ladder:
+            self.h = snap_to_ladder(self.h, self.ladder)
         self._grad_norm = _ema_default()
         self._param_norm = _ema_default()
         self._blocks = 0
@@ -244,8 +289,15 @@ class AdaptiveController:
     def _resolve(self) -> None:
         est = self.telemetry.estimates()
         if est is None:
-            return
-        t_step, t_sync = est
+            # single-H block telemetry cannot split T_step/T_sync yet —
+            # fall back to the (sync-amortized) per-step time + analytic
+            # wire T_sync so the first move can happen at all
+            t_step = self.telemetry.per_step_s()
+            t_sync = None
+            if not t_step:
+                return
+        else:
+            t_step, t_sync = est
         if t_step <= 0:
             return
         inp = TuneInputs(
@@ -259,6 +311,14 @@ class AdaptiveController:
                                   target_overhead=self.target_overhead,
                                   max_drift=self.max_drift,
                                   sync_time_override=t_sync))
+        if self.ladder:
+            target = snap_to_ladder(h_new, self.ladder)
+            cur = self.ladder.index(self.h)
+            tgt = self.ladder.index(target)
+            if tgt != cur and abs(tgt - cur) >= self.rung_hysteresis:
+                self.h = target
+                self.history.append((self._blocks, target))
+            return
         if h_new != self.h and abs(h_new - self.h) > self.hysteresis * self.h:
             self.h = h_new
             self.history.append((self._blocks, h_new))

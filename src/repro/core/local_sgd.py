@@ -305,6 +305,52 @@ def finalize_state(state, cfg: TrainConfig):
     return {**state, "params": flushed, "sync": new_sync}
 
 
+def ladder_switch_state(state, cfg: TrainConfig):
+    """Exact state for resuming the schedule at a *different* H mid-run —
+    the H-ladder runtime's switch transform (jittable, layout-preserving).
+
+    :func:`finalize_state` collapses the replicas to the fully
+    synchronized model and zeroes/re-seeds the carried sync buffers
+    (pending correction, EF residual, async ``sent``/``mixbuf``); on top
+    of that the schedule *counters* restart (``chunk_idx``,
+    ``gossip_round`` → 0) and the chunked-slowmo ``anchor`` re-seeds from
+    the flushed params — exactly :func:`repro.core.sync.init_sync_state`
+    evaluated at the flushed model. The result is therefore bit-identical
+    to launching a fresh run at the new H from the flushed model (with
+    the optimizer state carried over; the slowmo outer momentum is also
+    carried — it is optimizer-like state, not schedule state, so a
+    switch does not forget it). The state layout is unchanged, which is
+    what lets every ladder rung share one compiled signature.
+    """
+    sync = state["sync"]
+    if (cfg.sync.overlap == "none" and cfg.sync.topology == "all"
+            and "ef" in sync):
+        # finalize_state no-ops here (blocking global sync keeps replicas
+        # identical), but the error-feedback residual is live per-replica
+        # state a fresh launch would not have: fold its replica mean into
+        # the params — exactly what the next sync's averaging would have
+        # spread to everyone — and zero the buffer, as the flush does for
+        # every other mode.
+        params = jax.tree.map(
+            lambda p, e: (p.astype(jnp.float32)
+                          + jnp.mean(e, axis=0, keepdims=True)
+                          ).astype(p.dtype),
+            state["params"], sync["ef"])
+        state = {**state, "params": params,
+                 "sync": {**sync,
+                          "ef": jax.tree.map(jnp.zeros_like, sync["ef"])}}
+    state = finalize_state(state, cfg)
+    new_sync = dict(state["sync"])
+    if "chunk_idx" in new_sync:
+        new_sync["chunk_idx"] = jnp.zeros_like(new_sync["chunk_idx"])
+    if "gossip_round" in new_sync:
+        new_sync["gossip_round"] = jnp.zeros_like(new_sync["gossip_round"])
+    if "anchor" in new_sync:
+        new_sync["anchor"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), state["params"])
+    return {**state, "sync": new_sync}
+
+
 def make_train_step(model, cfg: TrainConfig, mesh: Mesh,
                     rules: Optional[ShardingRules] = None,
                     telemetry=None) -> Callable:

@@ -775,3 +775,65 @@ def dms_block_stepper(mesh, axis: str, *, d: int, c: float = 1.0,
         return f(carry, xblk, yblk)
 
     return step
+
+
+def dms_block_ladder(mesh, axis: str, *, d: int, workers: int, block_sizes,
+                     c: float = 1.0, grad_impl: str = "jnp",
+                     overlap: str = "none", chunks: int = 4,
+                     topology: str = "all", gossip_async: bool = False,
+                     dtype=jnp.float32):
+    """Pre-compiled block-size ladder for the SVM path — the DMS analog of
+    the LM trainer's H-ladder (:mod:`repro.runtime.ladder`).
+
+    One :func:`dms_block_stepper` is traced once (its carry layout is
+    block-size independent) and AOT-compiled for every ``bs`` in
+    ``block_sizes``: ``{bs: compiled}`` where ``compiled(carry, xblk,
+    yblk, alpha)`` expects ``xblk (K, bs, d)`` / ``yblk (K, bs)`` and can
+    never retrace or recompile (a shape mismatch raises). A mid-run MSF
+    move is :func:`dms_ladder_switch` on the carry + picking another
+    rung + re-blocking the data stream.
+    """
+    step = dms_block_stepper(mesh, axis, d=d, c=c, grad_impl=grad_impl,
+                             overlap=overlap, chunks=chunks,
+                             topology=topology, gossip_async=gossip_async)
+    jitted = jax.jit(step)
+    carry = dms_stepper_init(jnp.zeros((d,), dtype), workers,
+                             overlap=overlap, chunks=chunks,
+                             topology=topology, gossip_async=gossip_async)
+    carry_avals = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), carry)
+    alpha_aval = jax.ShapeDtypeStruct((), dtype)
+    out = {}
+    for bs in sorted(set(int(b) for b in block_sizes)):
+        x_aval = jax.ShapeDtypeStruct((workers, bs, d), dtype)
+        y_aval = jax.ShapeDtypeStruct((workers, bs), dtype)
+        out[bs] = jitted.lower(carry_avals, x_aval, y_aval,
+                               alpha_aval).compile()
+    return out
+
+
+def dms_ladder_switch(carry, *, overlap: str = "none", chunks: int = 4,
+                      topology: str = "all", gossip_async: bool = False,
+                      d: Optional[int] = None):
+    """Exact carry for resuming DMS at a different block size (host-level,
+    stacked carry from :func:`dms_stepper_init`/:func:`dms_block_stepper`).
+
+    Collapses the carry to the flushed model — delayed folds the pending
+    correction first, then the worker mean (exact: workers are identical
+    under blocking ``topology="all"``; within one block's drift under
+    delayed; and the mean is the invariant consensus target under any
+    gossip topology, chunked staleness included) — and re-seeds a fresh
+    carry at that model via :func:`dms_stepper_init`. By construction the
+    result is bit-identical to a fresh ladder start from the flushed
+    weights, which is the ladder-switch exactness the tests assert.
+    """
+    wk = carry["w"].astype(jnp.float32)
+    if overlap == "delayed":
+        wk = wk + carry["pending"].astype(jnp.float32)
+    w = jnp.mean(wk, axis=0)
+    if overlap == "chunked" and d is not None:
+        w = w[:d]
+    workers = carry["w"].shape[0]
+    return dms_stepper_init(w.astype(carry["w"].dtype), workers,
+                            overlap=overlap, chunks=chunks,
+                            topology=topology, gossip_async=gossip_async)

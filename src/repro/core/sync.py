@@ -142,6 +142,15 @@ def validate(cfg: SyncConfig) -> None:
         if cfg.adapt_hysteresis < 0.0:
             raise ValueError("adapt_hysteresis must be >= 0, "
                              f"got {cfg.adapt_hysteresis}")
+        if cfg.adapt_rung_hysteresis < 1:
+            raise ValueError("adapt_rung_hysteresis must be >= 1, "
+                             f"got {cfg.adapt_rung_hysteresis}")
+        if cfg.adapt_h_max < 1:
+            raise ValueError(f"adapt_h_max must be >= 1, "
+                             f"got {cfg.adapt_h_max}")
+        if any(h < 1 for h in cfg.adapt_ladder):
+            raise ValueError(f"adapt_ladder rungs must be >= 1, "
+                             f"got {cfg.adapt_ladder}")
 
 
 def init_sync_state(cfg: SyncConfig, params) -> Dict[str, Any]:

@@ -48,6 +48,7 @@ class BlockTelemetry:
         self._skip_sync = warmup
         self._skip_block = warmup
         self._block_by_h: Dict[int, EMA] = {}   # H → per-STEP wall-time EMA
+        self._block_n_by_h: Dict[int, int] = {}  # H → recorded block count
         self.n_steps = 0
         self.n_syncs = 0
         self.n_blocks = 0
@@ -82,6 +83,7 @@ class BlockTelemetry:
             return
         self.n_blocks += 1
         h = max(1, int(h))
+        self._block_n_by_h[h] = self._block_n_by_h.get(h, 0) + 1
         if sync_s is not None:
             self._sync.update(sync_s)
             self.n_syncs += 1
@@ -125,6 +127,23 @@ class BlockTelemetry:
                 if e.value is not None]
         return sum(vals) / len(vals) if vals else None
 
+    def per_rung(self) -> Dict[int, dict]:
+        """Per-H block stats — the H-ladder runtime's rung telemetry.
+
+        ``per_step_s`` is the rung's whole-block wall time divided by H
+        (sync amortized in); ``blocks`` how many blocks ran at that rung.
+        Rungs observed only through the direct (separately timed) path
+        report counts without a per-step EMA.
+        """
+        out: Dict[int, dict] = {}
+        for h in sorted(self._block_n_by_h):
+            ema = self._block_by_h.get(h)
+            out[h] = {
+                "per_step_s": ema.value if ema is not None else None,
+                "blocks": self._block_n_by_h[h],
+            }
+        return out
+
     def to_dict(self) -> dict:
         est = self.estimates()
         return {
@@ -133,4 +152,5 @@ class BlockTelemetry:
             "n_steps": self.n_steps,
             "n_syncs": self.n_syncs,
             "n_blocks": self.n_blocks,
+            "per_rung": {str(h): r for h, r in self.per_rung().items()},
         }

@@ -55,9 +55,20 @@ class DataPipeline:
         lo = jax.process_index() * per
         return {k: v[lo:lo + per] for k, v in batch.items()}
 
-    def __next__(self) -> Dict[str, jax.Array]:
+    def next_host(self) -> Dict[str, np.ndarray]:
+        """Advance the cursor and return the host (numpy) batch.
+
+        The H-ladder block assembly stacks microbatches on host with
+        numpy and feeds the result straight to a pre-compiled executable:
+        no eager jnp op may run there, or its first-use compile would
+        break the ladder's zero-recompile-after-warmup guarantee.
+        """
         batch = self.process_slice(self._host_batch(self._step))
         self._step += 1
+        return batch
+
+    def __next__(self) -> Dict[str, jax.Array]:
+        batch = self.next_host()
         if self.batch_sharding is not None:
             return {k: jax.device_put(v, self.batch_sharding[k])
                     for k, v in batch.items()}

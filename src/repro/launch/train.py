@@ -15,7 +15,7 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.config import TrainConfig, config_fingerprint, get_arch, get_smoke
@@ -30,16 +30,80 @@ from repro.runtime import StepRunner
 from repro.sharding import rules_for
 
 
-def build_trainer(cfg: TrainConfig, mesh):
-    """Returns (step_fn, initial state, make_pipeline, model, telemetry).
+class _Blocked:
+    """Groups H microbatches into one (H, B, …) train block.
 
-    With ``sync.adaptive`` the step is wrapped in the block-time telemetry
-    hook (host-side timer over the sharded jit — donation and shardings
-    untouched) and ``telemetry`` is a live
-    :class:`repro.core.telemetry.BlockTelemetry`; otherwise ``None``. The
-    driver reports the controller's re-solved H at the end of the run —
-    changing H *mid-run* recompiles the train block (ROADMAP item), so the
-    recommendation feeds the next launch rather than this one.
+    Assembly is host-side numpy (``DataPipeline.next_host``): the H-ladder
+    path feeds the stacked block straight into a pre-compiled executable,
+    and any eager jnp op here would compile on first use and break the
+    ladder's zero-recompile-after-warmup guarantee.
+    """
+
+    def __init__(self, inner, h: int):
+        self.inner = inner
+        self.h = h
+
+    def state(self):
+        return self.inner.state()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        mbs = [self.inner.next_host() for _ in range(self.h)]
+        return {k: np.stack([m[k] for m in mbs]) for k in mbs[0]}
+
+
+def _build_ladder(cfg: TrainConfig, mesh, jitted, state, shardings,
+                  telemetry, counter, replicas: int):
+    """Ladder warmup: AOT-compile every rung + the switch transform, then
+    hand them to a :class:`repro.runtime.ladder.LadderRuntime` with the
+    controller in ladder mode. ``counter.mark()`` closes the warmup
+    window the zero-recompile assertion measures from."""
+    from repro.core.autotune import DCN_BW, AdaptiveController
+    from repro.runtime.ladder import (LadderRuntime, _avals, compile_rungs)
+
+    rungs = cfg.sync.ladder_rungs()
+    sample = DataPipeline(cfg.data, cfg.model).next_host()
+    with jax.set_mesh(mesh):
+        compiled = compile_rungs(jitted, state, sample, rungs)
+        switch = jax.jit(
+            lambda s: LS.ladder_switch_state(s, cfg),
+            in_shardings=(shardings,), out_shardings=shardings,
+            donate_argnums=(0,)).lower(_avals(state)).compile()
+    timed = {hh: LS.timed_step(fn, hh, telemetry, jit_step=False)
+             for hh, fn in compiled.items()}
+    ctrl = AdaptiveController(
+        cfg.sync,
+        param_bytes_per_chip=max(1, 4 * cfg.model.param_count()
+                                 // max(1, mesh.devices.size)),
+        replicas=max(2, replicas), link_bw=DCN_BW,
+        lr=cfg.optimizer.learning_rate, telemetry=telemetry,
+        ladder=rungs)
+    if counter is not None:
+        counter.mark()
+    return LadderRuntime(timed, switch, ctrl, telemetry=telemetry,
+                         shardings=shardings, compile_counter=counter)
+
+
+def build_trainer(cfg: TrainConfig, mesh):
+    """Returns (step_fn, initial state, make_pipeline, model, telemetry,
+    ladder).
+
+    With ``sync.adaptive`` on a replica-sync strategy the trainer builds
+    the **H-ladder runtime**: the train block is AOT-compiled for every
+    rung of ``cfg.sync.ladder_rungs()`` (shared state layout — one traced
+    signature, one executable per batch shape), the switch transform is
+    AOT-compiled too, and ``ladder`` is a live
+    :class:`repro.runtime.ladder.LadderRuntime` the step runner drives —
+    the controller moves H *mid-run* with zero XLA compiles after the
+    ladder warmup (counted by the ladder's ``CompileCounter``). In that
+    mode ``step_fn`` is the un-warmed jit and must not be called directly
+    (use ``ladder.step_fn``). With ``sync.adaptive`` on ``sync_every_step``
+    the step is only wrapped in the block-time telemetry hook and the
+    driver reports a recommendation for the next launch; ``telemetry`` is
+    a live :class:`repro.core.telemetry.BlockTelemetry` in both adaptive
+    modes, ``None`` otherwise.
     """
     rules = rules_for(cfg.mesh, mesh)
     model = build_model(cfg.model, scan_layers=cfg.scan_layers,
@@ -47,6 +111,14 @@ def build_trainer(cfg: TrainConfig, mesh):
     use_replicas = SY.needs_replica_axis(cfg.sync)
     replicas = cfg.mesh.axis_size(cfg.mesh.replica_axis or "pod") \
         if use_replicas else 0
+
+    build_ladder = cfg.sync.adaptive and use_replicas
+    counter = None
+    if build_ladder:
+        # install before any compilation so warmup compiles are counted
+        # (and everything after mark() must be zero)
+        from repro.runtime.ladder import CompileCounter
+        counter = CompileCounter().install()
 
     with jax.set_mesh(mesh):
         state = LS.init_state(model, cfg, jax.random.key(cfg.seed),
@@ -63,37 +135,26 @@ def build_trainer(cfg: TrainConfig, mesh):
     h = cfg.sync.period if use_replicas else 0
 
     telemetry = None
+    ladder = None
     if cfg.sync.adaptive:
         from repro.core.telemetry import BlockTelemetry
         telemetry = BlockTelemetry()
-        # wrap the already-sharded/donating jit — jit_step=False keeps it
-        jitted = LS.timed_step(jitted, max(1, h) if use_replicas else 1,
-                               telemetry, jit_step=False)
+        if build_ladder:
+            ladder = _build_ladder(cfg, mesh, jitted, state, shardings,
+                                   telemetry, counter, replicas)
+        else:
+            # wrap the already-sharded/donating jit — jit_step=False
+            # keeps it
+            jitted = LS.timed_step(jitted, 1, telemetry, jit_step=False)
 
     def make_pipeline(start_step: int):
         pipe = DataPipeline(cfg.data, cfg.model, start_step=start_step)
-        if not h:
+        cur_h = ladder.h if ladder is not None else h
+        if not cur_h:
             return pipe
+        return _Blocked(pipe, cur_h)
 
-        class Blocked:
-            """Groups H microbatches into one (H, B, …) train block."""
-
-            def __init__(self, inner):
-                self.inner = inner
-
-            def state(self):
-                return self.inner.state()
-
-            def __iter__(self):
-                return self
-
-            def __next__(self):
-                mbs = [next(self.inner) for _ in range(h)]
-                return {k: jnp.stack([m[k] for m in mbs]) for k in mbs[0]}
-
-        return Blocked(pipe)
-
-    return jitted, state, make_pipeline, model, telemetry
+    return jitted, state, make_pipeline, model, telemetry, ladder
 
 
 def main() -> None:
@@ -120,10 +181,12 @@ def main() -> None:
                       steps=args.steps)
     cfg = apply_overrides(cfg, args.overrides)
 
-    step, state, make_pipeline, _, telemetry = build_trainer(cfg, mesh)
+    step, state, make_pipeline, _, telemetry, ladder = build_trainer(cfg,
+                                                                     mesh)
     ckpt = CheckpointManager(cfg.checkpoint)
     runner = StepRunner(step, ckpt, cfg.fault, cfg.checkpoint.interval_steps,
-                        make_pipeline, fingerprint=config_fingerprint(cfg))
+                        make_pipeline, fingerprint=config_fingerprint(cfg),
+                        ladder=ladder)
 
     t0 = time.time()
     with jax.set_mesh(mesh):
@@ -139,30 +202,42 @@ def main() -> None:
         "restarts": runner.restarts,
         "stragglers": len(runner.watchdog.events),
     }
-    if telemetry is not None:
-        # the adaptive re-solve's recommendation for the NEXT launch
-        # (H moves recompile the block, so it isn't applied mid-run). A
-        # single-H run can't split T_step/T_sync from block times alone;
-        # fall back to measured step + analytic sync in that case.
-        from repro.core.autotune import DCN_BW, TuneInputs, choose_period
-        est = telemetry.estimates()
-        t_step = est[0] if est else telemetry.per_step_s()
-        rec = None
-        if t_step:
-            inp = TuneInputs(
-                param_bytes_per_chip=max(1, 4 * cfg.model.param_count()
-                                         // max(1, mesh.devices.size)),
-                replicas=max(2, cfg.mesh.axis_size(cfg.mesh.replica_axis)),
-                step_time_s=t_step, link_bw=DCN_BW,
-                lr=cfg.optimizer.learning_rate)
-            rec = choose_period(
-                inp, cfg.sync,
-                target_overhead=cfg.sync.adapt_target_overhead,
-                max_drift=cfg.sync.adapt_max_drift,
-                sync_time_override=est[1] if est else None)
-        out["adaptive"] = {"telemetry": telemetry.to_dict(),
-                           "recommended_h": rec}
+    if ladder is not None:
+        # the live H-ladder run: trajectory, switches, per-rung telemetry
+        # and the compile count the adaptive-smoke CI job asserts on
+        out["adaptive"] = ladder.to_dict()
+        out["adaptive"]["controller_history"] = [
+            list(t) for t in ladder.controller.history]
+    elif telemetry is not None:
+        out["adaptive"] = adaptive_report(cfg, mesh, telemetry)
     print(json.dumps(out))
+
+
+def adaptive_report(cfg: TrainConfig, mesh, telemetry) -> dict:
+    """The non-ladder adaptive summary: the re-solve's recommendation for
+    the NEXT launch (``sync_every_step`` has no block to ladder). A
+    single-H run can't split T_step/T_sync from block times alone; fall
+    back to measured step + analytic sync in that case. The replica count
+    uses the same ``or "pod"`` fallback as ``build_trainer`` — an unset
+    ``replica_axis`` must not change which axis the report prices."""
+    from repro.core.autotune import DCN_BW, TuneInputs, choose_period
+    est = telemetry.estimates()
+    t_step = est[0] if est else telemetry.per_step_s()
+    rec = None
+    if t_step:
+        inp = TuneInputs(
+            param_bytes_per_chip=max(1, 4 * cfg.model.param_count()
+                                     // max(1, mesh.devices.size)),
+            replicas=max(2, cfg.mesh.axis_size(
+                cfg.mesh.replica_axis or "pod")),
+            step_time_s=t_step, link_bw=DCN_BW,
+            lr=cfg.optimizer.learning_rate)
+        rec = choose_period(
+            inp, cfg.sync,
+            target_overhead=cfg.sync.adapt_target_overhead,
+            max_drift=cfg.sync.adapt_max_drift,
+            sync_time_override=est[1] if est else None)
+    return {"telemetry": telemetry.to_dict(), "recommended_h": rec}
 
 
 if __name__ == "__main__":

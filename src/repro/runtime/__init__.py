@@ -1,3 +1,6 @@
 from repro.runtime.ft import StepRunner, StragglerWatchdog, FaultInjector
+from repro.runtime.ladder import (CompileCounter, LadderRuntime,
+                                  compile_rungs)
 
-__all__ = ["StepRunner", "StragglerWatchdog", "FaultInjector"]
+__all__ = ["StepRunner", "StragglerWatchdog", "FaultInjector",
+           "CompileCounter", "LadderRuntime", "compile_rungs"]

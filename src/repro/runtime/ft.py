@@ -69,13 +69,20 @@ class StepRunner:
 
     def __init__(self, step_fn: Callable, ckpt_manager, fault_cfg: FaultToleranceConfig,
                  ckpt_interval: int, make_pipeline: Callable[[int], Any],
-                 fingerprint: str = ""):
+                 fingerprint: str = "", ladder=None):
         self.step_fn = step_fn
         self.ckpt = ckpt_manager
         self.cfg = fault_cfg
         self.interval = max(1, ckpt_interval)
         self.make_pipeline = make_pipeline
         self.fingerprint = fingerprint
+        # optional H-ladder runtime (repro.runtime.ladder.LadderRuntime):
+        # when set, each step is one sync block executed by the ladder's
+        # current pre-compiled rung; after the block the controller may
+        # switch rungs, in which case the (flushed) state continues under
+        # the new compiled callable and the data pipeline is re-blocked
+        # at the new H from its current cursor — no recompilation.
+        self.ladder = ladder
         self.watchdog = StragglerWatchdog(fault_cfg.step_deadline_sec)
         self.injector = FaultInjector(fault_cfg)
         self.restarts = 0
@@ -96,12 +103,16 @@ class StepRunner:
         return state, step
 
     def _run_until(self, state, step: int, end: int, pipeline):
-        for batch in pipeline:
-            if step >= end:
+        while step < end:
+            try:
+                batch = next(pipeline)
+            except StopIteration:
                 break
             self.injector.before_step(step)
+            step_fn = (self.ladder.step_fn if self.ladder is not None
+                       else self.step_fn)
             t0 = time.perf_counter()
-            state, metrics = self.step_fn(state, batch)
+            state, metrics = step_fn(state, batch)
             jax.block_until_ready(jax.tree.leaves(metrics))
             elapsed = time.perf_counter() - t0
             straggled = self.watchdog.check(step, elapsed)
@@ -110,9 +121,16 @@ class StepRunner:
                  **{k: float(v) for k, v in metrics.items()}})
             step += 1
             if step % self.interval == 0:
-                self.ckpt.save(step, state,
-                               extra={"data": pipeline.state()},
+                extra = {"data": pipeline.state()}
+                if self.ladder is not None:
+                    extra["ladder"] = self.ladder.checkpoint_state()
+                self.ckpt.save(step, state, extra=extra,
                                fingerprint=self.fingerprint)
+            if self.ladder is not None:
+                state, switched = self.ladder.on_block(state)
+                if switched:
+                    # same microbatch stream, re-blocked at the new H
+                    pipeline = self.make_pipeline(pipeline.state()["step"])
         return state, step, pipeline
 
     def _restore(self, like_state):
@@ -124,4 +142,8 @@ class StepRunner:
         state, extra = self.ckpt.restore(
             like_state, expected_fingerprint=self.fingerprint)
         cursor = int(extra.get("data", {}).get("step", latest))
+        if self.ladder is not None:
+            if "ladder" in extra:
+                self.ladder.restore(extra["ladder"])
+            state = self.ladder.place(state)
         return state, latest, self.make_pipeline(cursor)

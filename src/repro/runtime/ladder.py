@@ -1,0 +1,202 @@
+"""H-ladder runtime: mid-run adaptive MSF with zero recompiles.
+
+The adaptive controller (PR 3) could only *recommend* an H for the next
+launch: changing ``sync.period`` mid-run retraced and recompiled the train
+block, so one long run could not traverse the paper's Figs 13-15 frontier
+online. This module closes that gap:
+
+* :func:`compile_rungs` AOT-compiles ("ladder warmup") ONE jitted train
+  block for a geometric ladder of periods ``SyncConfig.ladder_rungs()``.
+  The block body is H-independent -- the ``lax.scan`` over microbatches is
+  driven by the batch's leading dim -- and the sync-state layout is
+  H-independent too, so every rung shares one traced signature and one
+  state pytree; only the compiled executable differs (batch shape
+  ``(H, B, ...)``). ``jitted.lower(...).compile()`` pins each rung to a
+  concrete executable: calling one can never retrace or recompile (a
+  shape mismatch raises instead).
+
+* :class:`LadderRuntime` holds the compiled rungs, the AOT-compiled
+  switch transform (:func:`repro.core.local_sgd.ladder_switch_state` --
+  flush the sync state to the fully synchronized model + restart the
+  schedule counters), and the :class:`repro.core.autotune
+  .AdaptiveController` in ladder mode. A controller move mid-run is then
+  (a) one compiled switch call at the sync boundary and (b) picking a
+  different already-compiled callable -- the driver also re-blocks the
+  data pipeline at the new H. The switch is *exact*: bit-identical to
+  launching fresh at the new H from the flushed model.
+
+* :class:`CompileCounter` listens on jax's monitoring stream for backend
+  compiles -- the hook CI's ``adaptive-smoke`` job uses to assert that
+  after ladder warmup the whole adaptive run (blocks, switches,
+  checkpoints) performs ZERO XLA compiles. Host-side block assembly must
+  therefore stay numpy-only (see ``DataPipeline.next_host``): any stray
+  eager jnp op would compile on first use and trip the assertion.
+
+The runtime is deliberately host-driven and framework-level: it knows
+nothing about the model, only about (state, batch) callables -- the SVM
+path gets the same treatment from :func:`repro.core.svm.dms_block_ladder`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+
+
+class CompileCounter:
+    """Counts XLA backend compiles via ``jax.monitoring`` duration events.
+
+    ``mark()`` snapshots the count after ladder warmup;
+    ``since_mark`` is the number CI asserts to be zero. Listener
+    registration is process-global and cannot be undone on this jax
+    version, so install one counter per process (``install`` is
+    idempotent per instance).
+    """
+
+    EVENT = "/jax/core/compile/backend_compile_duration"
+
+    def __init__(self):
+        self.count = 0
+        self.marked = 0
+        self._installed = False
+
+    def install(self) -> "CompileCounter":
+        if not self._installed:
+            jax.monitoring.register_event_duration_secs_listener(self._on)
+            self._installed = True
+        return self
+
+    def _on(self, name: str, _duration: float, **_kw) -> None:
+        if name == self.EVENT:
+            self.count += 1
+
+    def mark(self) -> None:
+        self.marked = self.count
+
+    @property
+    def since_mark(self) -> int:
+        return self.count - self.marked
+
+
+def _avals(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def compile_rungs(jitted_step: Callable, state, sample_batch,
+                  rungs) -> Dict[int, Callable]:
+    """AOT-compile ``jitted_step`` for every rung's block shape.
+
+    ``sample_batch`` is ONE microbatch (host numpy or jax leaves); rung H
+    compiles for batch leaves ``(H,) + leaf.shape``. Returns
+    ``{H: compiled}`` -- compiled executables raise on any other shape
+    rather than recompiling, which is what makes the zero-recompile
+    property enforceable by construction.
+    """
+    state_avals = _avals(state)
+    out: Dict[int, Callable] = {}
+    for h in sorted(set(int(r) for r in rungs)):
+        batch_avals = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((h,) + tuple(x.shape), x.dtype),
+            sample_batch)
+        out[h] = jitted_step.lower(state_avals, batch_avals).compile()
+    return out
+
+
+class LadderRuntime:
+    """Pre-compiled H ladder + adaptive controller, driven per block.
+
+    The step runner calls :attr:`step_fn` for each block and
+    :meth:`on_block` after it; a controller rung move applies the
+    compiled switch and the runner re-blocks the data pipeline
+    (:attr:`h` is the authoritative current rung). ``trajectory`` records
+    every ``(block, H)`` transition including the start -- the artifact
+    the CI job uploads.
+    """
+
+    def __init__(self, rungs: Dict[int, Callable], switch_fn: Callable,
+                 controller, telemetry=None, shardings=None,
+                 compile_counter: Optional[CompileCounter] = None):
+        if controller.h not in rungs:
+            raise ValueError(
+                f"controller start rung {controller.h} not in compiled "
+                f"ladder {sorted(rungs)}")
+        self.rungs = dict(rungs)
+        self.switch_fn = switch_fn
+        self.controller = controller
+        self.telemetry = telemetry
+        self.shardings = shardings
+        self.compile_counter = compile_counter
+        self.blocks = 0
+        self.switches = 0
+        self.trajectory: List[Tuple[int, int]] = [(0, controller.h)]
+
+    @property
+    def h(self) -> int:
+        return self.controller.h
+
+    @property
+    def step_fn(self) -> Callable:
+        return self.rungs[self.h]
+
+    def on_block(self, state):
+        """One executed block: feed the controller, maybe switch rungs.
+
+        Returns ``(state, switched)`` -- on a switch the state has been
+        flushed/re-seeded by the compiled switch transform and the caller
+        must re-block its data pipeline at the new :attr:`h`.
+        """
+        self.blocks += 1
+        h_prev = self.controller.h
+        # timing already landed in the shared telemetry via the per-rung
+        # timed wrappers; this only advances the re-solve cadence
+        self.controller.observe_block()
+        if self.controller.h != h_prev:
+            state = self.switch_fn(state)
+            self.switches += 1
+            self.trajectory.append((self.blocks, self.controller.h))
+            return state, True
+        return state, False
+
+    # ------------------------------------------------------- checkpointing
+    def checkpoint_state(self) -> dict:
+        """The rung the checkpoint must restore (controller telemetry is
+        deliberately not persisted -- it re-warms within adapt_every
+        blocks)."""
+        return {"h": self.h, "blocks": self.blocks}
+
+    def restore(self, ck: dict) -> None:
+        h = int(ck["h"])
+        if h not in self.rungs:
+            raise ValueError(
+                f"checkpointed rung {h} not in compiled ladder "
+                f"{sorted(self.rungs)}")
+        # rewind the block counter to the checkpoint so replayed blocks
+        # index the trajectory consistently with the run being resumed
+        self.blocks = int(ck.get("blocks", self.blocks))
+        if h != self.controller.h:
+            self.controller.h = h
+            self.controller.history.append((self.controller._blocks, h))
+            self.trajectory.append((self.blocks, h))
+
+    def place(self, state):
+        """Re-enter restored (host) state into the mesh layout the
+        compiled rungs expect."""
+        if self.shardings is None:
+            return state
+        return jax.tree.map(jax.device_put, state, self.shardings)
+
+    def to_dict(self) -> dict:
+        out = {
+            "ladder": sorted(self.rungs),
+            "h": self.h,
+            "blocks": self.blocks,
+            "switches": self.switches,
+            "h_trajectory": [list(t) for t in self.trajectory],
+        }
+        if self.compile_counter is not None:
+            out["compiles_total"] = self.compile_counter.count
+            out["compiles_after_warmup"] = self.compile_counter.since_mark
+        if self.telemetry is not None:
+            out["telemetry"] = self.telemetry.to_dict()
+        return out
